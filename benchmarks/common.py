@@ -1,0 +1,65 @@
+"""Shared benchmark infrastructure.
+
+Every benchmark module exposes run(scale) -> dict and maps 1:1 to a paper
+table/figure (DESIGN.md §7). Scales:
+  small  — CI-sized (seconds; the default for benchmarks.run)
+  medium — minutes on one CPU host
+Results are appended to experiments/bench/<name>.json.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+# WDC-flavored templates over degree-labeled R-MAT graphs. Labels follow
+# l(v) = ceil(log2(deg+1)); mid-frequency labels (3..6) are abundant the way
+# com/org/net are in WDC.
+WDC_LIKE_TEMPLATES = {
+    # WDC-1 flavor: acyclic, repeated labels -> PC + TDS
+    "T1-path-repeat": ([4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+    # WDC-2 flavor: two cycles sharing an edge -> CC + TDS
+    "T2-bowtie": ([4, 5, 3, 5, 4], [(0, 1), (1, 2), (2, 0), (1, 3), (3, 4), (4, 1)]),
+    # WDC-3 flavor: monocycle -> CC only
+    "T3-square": ([3, 4, 5, 6], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+    # WDC-4 flavor: same topology, rarer labels
+    "T4-square-rare": ([6, 7, 8, 7], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+}
+
+
+def timer(fn: Callable, *args, repeat: int = 1, **kwargs):
+    best, out = float("inf"), None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kwargs)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def save(name: str, payload: Dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=_np_default)
+    return path
+
+
+def _np_default(o):
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return str(o)
+
+
+def graph_for(scale_name: str, seed: int = 0):
+    from repro.graph import generators as gen
+    scale = {"small": 11, "medium": 14, "large": 16}[scale_name]
+    return gen.rmat_graph(scale, edge_factor=8, preset="graph500", seed=seed)

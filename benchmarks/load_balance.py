@@ -1,0 +1,52 @@
+"""Fig. 7 — load balancing: NLB vs LB (reshuffle) and the smaller-deployment
+scenarios (LB-16 / LB-1). We report the paper's imbalance characterization
+(shards holding half the active edges, max/mean) before and after reshuffle,
+and a CPU-hours proxy (shards x per-shard max work) for elastic scale-down."""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core.template import Template
+from repro.core.pipeline import prune
+from repro.core.loadbalance import (
+    imbalance_stats, compact_and_repartition, compact_active_graph,
+)
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    # T4 keeps a nonempty, concentrated solution (the paper's imbalance case)
+    labels, edges = WDC_LIKE_TEMPLATES["T4-square-rare"]
+    tmpl = Template(labels, edges)
+    res = prune(g, tmpl)
+    out: Dict = {"graph": {"n": g.n, "m": g.m}, "solution": res.counts(),
+                 "deployments": {}}
+    P0 = 64
+    nlb = imbalance_stats(g, res.state, P0, res.dg)
+    out["NLB"] = {
+        "P": P0,
+        "shards_holding_half": nlb.shards_holding_half,
+        "max_over_mean": nlb.max_over_mean_edges,
+        "gini": nlb.gini_edges,
+    }
+    for P in (64, 16, 1):
+        shuffled, part, info = compact_and_repartition(g, res.dg, res.state, max(P, 1))
+        after = info["imbalance_after"]
+        # CPU-hours proxy: P x (max per-shard active arcs) / total arcs
+        work_max = after.edges_per_shard.max() if after.edges_per_shard.size else 0
+        out["deployments"][f"LB-{P}"] = {
+            "P": P,
+            "shards_holding_half": after.shards_holding_half,
+            "max_over_mean": after.max_over_mean_edges,
+            "gini": after.gini_edges,
+            "cpu_work_proxy": int(P * work_max),
+        }
+    save("load_balance", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,54 @@
+"""Run the full benchmark suite (one module per paper table/figure).
+
+  PYTHONPATH=src python -m benchmarks.run [--scale small|medium] [--only NAME]
+
+Results land in experiments/bench/<name>.json; a compact summary prints at
+the end. Roofline terms come from the dry-run (launch/dryrun.py), not here.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("strong_scaling", "Fig 5: phase breakdown + per-shard balance"),
+    ("edge_elimination", "Fig 6a: edge elimination ablation"),
+    ("work_aggregation", "Fig 6b: TDS token dedup ablation"),
+    ("load_balance", "Fig 7: reshuffle + smaller deployments"),
+    ("incremental", "Fig 9: naive vs PJI-X vs PJI-Y"),
+    ("exploratory", "Fig 10: progressive relaxation"),
+    ("enumeration_compare", "Tables 4/5: vs tree-search enumeration"),
+    ("template_sensitivity", "Table 6: template topology family"),
+    ("rmat_distributions", "Table 10: R-MAT skew sweep"),
+    ("frontier_edge_prune", "beyond-paper: CC edge-exactness, TDS skipped"),
+    ("precision_tradeoff", "Reza'18 §5E: effort vs precision (recall 100%)"),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="medium", choices=["small", "medium", "large"])
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    for name, desc in SUITES:
+        if args.only and name != args.only:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.perf_counter()
+        try:
+            mod.run(args.scale)
+            print(f"[ok]   {name:24s} {desc} ({time.perf_counter()-t0:.1f}s)")
+        except Exception as e:
+            failures.append((name, repr(e)))
+            print(f"[FAIL] {name:24s} {e}")
+            traceback.print_exc()
+    print(f"\n{len(failures)} benchmark failures")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

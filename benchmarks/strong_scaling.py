@@ -1,0 +1,53 @@
+"""Fig. 5 — strong scaling: phase breakdown (LCC / NLCC per constraint) across
+shard counts. On this CPU host true wall-clock scaling cannot be measured;
+following the paper's own methodology we report, per shard count P:
+per-phase wall time of the single-device engine, plus the distributed
+engine's per-shard work distribution (max/mean active arcs per shard — the
+quantity that bounds strong scaling, §5.3)."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.template import Template
+from repro.core.pipeline import prune
+from repro.core.loadbalance import imbalance_stats
+from repro.graph.structs import DeviceGraph
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    dg = DeviceGraph.from_host(g)
+    out: Dict = {"graph": {"n": g.n, "m": g.m}, "patterns": {}}
+    for name, (labels, edges) in WDC_LIKE_TEMPLATES.items():
+        tmpl = Template(labels, edges)
+        res = prune(g, tmpl, collect_stats=True)
+        phases = [
+            {"phase": p.phase, "constraint": p.constraint, "seconds": p.seconds,
+             "V*": p.active_vertices, "E*": p.active_edges}
+            for p in res.phases
+        ]
+        shards = {}
+        for P in (4, 16, 64):
+            st = imbalance_stats(g, res.state, P, dg)
+            shards[P] = {
+                "max_over_mean_edges": st.max_over_mean_edges,
+                "gini": st.gini_edges,
+                "shards_holding_half": st.shards_holding_half,
+            }
+        out["patterns"][name] = {
+            "phases": phases,
+            "total_seconds": sum(p.seconds for p in res.phases),
+            "solution": res.counts(),
+            "per_shard_balance": shards,
+            "stats": res.stats,
+        }
+    save("strong_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

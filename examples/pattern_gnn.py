@@ -1,0 +1,42 @@
+"""Paper technique x GNN integration: PruneJuice pruning as the data
+selection stage for GNN training (DESIGN.md §5 'beyond-paper feature').
+
+  PYTHONPATH=src python examples/pattern_gnn.py
+
+1. Prune a labeled graph to the union of all matches of a template.
+2. Train a PNA node classifier ON the pruned subgraph, with the engine's
+   per-vertex omega annotations as extra input features.
+"""
+import numpy as np
+import jax
+
+from repro.graph import generators as gen
+from repro.graph.structs import Graph
+from repro.core.template import Template
+from repro.data import PatternFilteredDataset
+from repro.configs import get_arch
+from repro.train import TrainConfig, build_train_step, init_state
+from repro.optim.adamw import AdamWConfig
+
+bg = gen.rmat_graph(11, edge_factor=8, seed=0, labeler="random", n_labels=6)
+needle = Graph.from_undirected_pairs(3, [(0, 1), (1, 2), (2, 0)], [4, 5, 3])
+g = gen.planted_pattern_graph(bg, needle, n_copies=30, seed=2)
+template = Template([4, 5, 3], [(0, 1), (1, 2), (2, 0)])
+
+D_FEAT, N_CLASSES = 16, 4
+ds = PatternFilteredDataset(g, template, d_feat=D_FEAT, n_classes=N_CLASSES, seed=0)
+print(f"background: n={g.n} m={g.m}; pruned to {ds.prune_counts} "
+      f"(omega features: {ds.omega.shape[1]})")
+
+cfg = get_arch("pna").smoke()
+tc = TrainConfig(optimizer=AdamWConfig(lr=5e-3, weight_decay=0.0))
+state, _ = init_state(jax.random.key(0), cfg, tc,
+                      d_in=D_FEAT + template.n0, n_classes=N_CLASSES)
+step = jax.jit(build_train_step(cfg, tc))
+losses = []
+for i in range(30):
+    state, metrics = step(state, ds(i))
+    losses.append(float(metrics["loss"]))
+print(f"PNA on pruned graph: loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+assert losses[-1] < losses[0]
+print("OK")

@@ -1,0 +1,45 @@
+"""Quickstart: the paper's pipeline end-to-end on a small graph.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Build a labeled background graph (R-MAT) and plant a needle pattern.
+2. Decompose the search template into constraints (Table 2).
+3. Prune via LCC + NLCC to the exact solution subgraph (100% P/R).
+4. Enumerate and count all matches on the pruned graph.
+"""
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph.structs import Graph
+from repro.core.template import Template, generate_constraints
+from repro.core.pipeline import prune
+from repro.core.enumerate import enumerate_matches
+
+# 1. background graph + planted diamond pattern
+background = gen.rmat_graph(12, edge_factor=8, seed=0, labeler="random", n_labels=8)
+needle = Graph.from_undirected_pairs(
+    4, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)], [9, 8, 9, 8])
+g = gen.planted_pattern_graph(background, needle, n_copies=5, seed=1)
+print(f"background graph: {g.n} vertices, {g.m} arcs, "
+      f"{g.n_labels} labels")
+
+# 2. the search template and its constraint decomposition
+template = Template([9, 8, 9, 8], [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+for c in generate_constraints(template, label_freq=g.label_frequency()):
+    print(f"  constraint: {c.kind:6s} walk={c.walk} complete={c.complete}")
+
+# 3. prune
+result = prune(g, template)
+print(f"solution subgraph: {result.counts()} "
+      f"(pruned from n={g.n}, m={g.m})")
+for p in result.phases:
+    print(f"  {p.phase:12s} {str(p.constraint or ''):42s} "
+          f"V*={p.active_vertices:6d} E*={p.active_edges:7d} {p.seconds*1e3:7.1f} ms")
+
+# 4. enumerate on the pruned graph
+enum = enumerate_matches(result.dg, result.state, template)
+print(f"matches: {enum.n_embeddings} embeddings, "
+      f"{enum.n_distinct_vertex_sets} distinct vertex sets, "
+      f"|Aut|={enum.automorphisms}")
+assert enum.n_embeddings >= 5 * enum.automorphisms  # the planted needles
+print("OK")

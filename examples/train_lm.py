@@ -1,0 +1,63 @@
+"""End-to-end driver (deliverable (b)): train a ~100M-param LM for a few
+hundred steps with the full production substrate — microbatched train step,
+remat, AdamW + cosine schedule, checkpoint/restart mid-run.
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+
+~100M params: 12 layers x d_model 768 x GQA 12/4 heads x d_ff 2048, vocab 8k.
+On CPU this runs a genuinely converging run at a reduced step count by
+default; pass --steps 300 for the full demonstration.
+"""
+import argparse
+import tempfile
+
+import jax
+
+from repro.configs.base import LMConfig
+from repro.train import TrainConfig, build_train_step, init_state, trainer
+from repro.optim.adamw import AdamWConfig
+from repro.data import SyntheticTokenStream
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=60)
+ap.add_argument("--batch", type=int, default=16)
+ap.add_argument("--seq", type=int, default=128)
+args = ap.parse_args()
+
+cfg = LMConfig(
+    name="lm-100m", n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+    d_ff=2048, vocab=8192, dtype="float32",
+)
+from repro.configs.base import LMConfig as _  # noqa
+n_params = cfg.n_params()
+print(f"model: {n_params/1e6:.1f}M params")
+
+tc = TrainConfig(
+    optimizer=AdamWConfig(lr=3e-4, weight_decay=0.01),
+    microbatches=2, remat=True,
+    warmup_steps=max(args.steps // 10, 1), total_steps=args.steps,
+)
+state, specs = init_state(jax.random.key(0), cfg, tc)
+step = jax.jit(build_train_step(cfg, tc), donate_argnums=(0,))
+stream = SyntheticTokenStream(cfg.vocab, args.batch, args.seq, seed=0)
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    # train the first half, simulate a crash, resume for the second half
+    half = args.steps // 2
+
+    class Bomb:
+        armed = True
+    def fail_once(s):
+        if s == half and Bomb.armed:
+            Bomb.armed = False
+            raise trainer.SimulatedFailure("node failure injected")
+
+    report = trainer.run(
+        state, step, stream, num_steps=args.steps,
+        ckpt_dir=ckpt_dir, ckpt_interval=max(half // 2, 1),
+        fail_hook=fail_once, log_every=10,
+    )
+    print(f"restarts survived: {report.restarts}")
+    print(f"loss: {report.losses[0]:.4f} -> {report.losses[-1]:.4f}")
+    assert report.losses[-1] < report.losses[0]
+    print("OK")

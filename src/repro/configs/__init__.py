@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> -> (CONFIG, SHAPES, smoke)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+_MODULES: Dict[str, str] = {
+    "starcoder2-15b": "repro.configs.starcoder2_15b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "qwen3-8b": "repro.configs.qwen3_8b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "pna": "repro.configs.pna",
+    "graphsage-reddit": "repro.configs.graphsage_reddit",
+    "gin-tu": "repro.configs.gin_tu",
+    "gat-cora": "repro.configs.gat_cora",
+    "bert4rec": "repro.configs.bert4rec",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_arch(arch_id: str):
+    """Returns the arch's config module (CONFIG, SHAPES, smoke())."""
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[arch_id])
+
+
+def get_config(arch_id: str):
+    return get_arch(arch_id).CONFIG
+
+
+def get_shapes(arch_id: str):
+    return get_arch(arch_id).SHAPES

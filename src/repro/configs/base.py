@@ -1,0 +1,208 @@
+"""Config dataclasses for all architecture families + input-shape descriptors.
+
+One module per assigned architecture lives next to this file; each exposes
+  CONFIG  — the exact published configuration
+  SHAPES  — the arch's own input-shape set (assignment cells)
+  smoke() — a reduced same-family config for CPU tests
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+
+# ---------------------------------------------------------------- LM family
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    attention: str = "gqa"                  # "gqa" | "mla"
+    qkv_bias: bool = False                  # qwen2
+    qk_norm: bool = False                   # qwen3
+    window: Optional[int] = None            # starcoder2 sliding window
+    mlp: str = "swiglu"                     # "swiglu" | "gelu"
+    norm: str = "rmsnorm"                   # "rmsnorm" | "layernorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    # MLA (deepseek)
+    q_lora_rank: Optional[int] = None
+    kv_lora_rank: Optional[int] = None
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    # MoE (deepseek)
+    moe: bool = False
+    n_routed: int = 0
+    n_shared: int = 0
+    top_k: int = 0
+    first_dense_layers: int = 0
+    dense_d_ff: Optional[int] = None        # d_ff of the leading dense layers
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # perf knobs (EXPERIMENTS.md §Perf): 0/False = paper-faithful baseline
+    moe_groups: int = 0          # >0: per-DP-group dispatch (local sort/scatter,
+    #                              expert movement becomes one all-to-all)
+    moe_gather_weights: bool = False  # ZeRO-3 style: all-gather expert weights
+    #                              at use instead of contracting sharded dims
+    fused_ce: int = 0            # >0: blockwise cross-entropy over vocab chunks
+    remat_policy: str = "full"   # "full" | "dots" (save matmul outputs)
+    train_microbatches: int = 0  # 0 = launcher default (8); fewer microbatches
+    #                              = fewer per-layer weight gathers, more
+    #                              activation memory per pass
+    # MTP (deepseek-v3)
+    mtp: bool = False
+    # numerics
+    dtype: str = "bfloat16"
+    norm_eps: float = 1e-6
+
+    @property
+    def kind(self) -> str:
+        return "lm"
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def n_params(self) -> int:
+        """Total parameter count (used for MODEL_FLOPS = 6*N*D)."""
+        d, hd = self.d_model, self.hd
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        per_layer = 0
+        if self.attention == "mla":
+            qin = (self.q_lora_rank or 0)
+            if self.q_lora_rank:
+                per_layer += d * self.q_lora_rank
+                per_layer += self.q_lora_rank * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+            else:
+                per_layer += d * self.n_heads * (self.qk_nope_dim + self.qk_rope_dim)
+            per_layer += d * (self.kv_lora_rank + self.qk_rope_dim)
+            per_layer += self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+            per_layer += self.n_heads * self.v_head_dim * d
+        else:
+            per_layer += d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd
+            per_layer += self.n_heads * hd * d
+        mlp_mult = 3 if self.mlp == "swiglu" else 2
+        total = emb + self.n_layers * per_layer
+        if self.moe:
+            dense_ff = self.dense_d_ff or self.d_ff
+            n_dense = self.first_dense_layers
+            n_moe = self.n_layers - n_dense
+            total += n_dense * mlp_mult * d * dense_ff
+            total += n_moe * (self.n_routed + self.n_shared) * mlp_mult * d * self.d_ff
+            total += n_moe * d * self.n_routed  # router
+        else:
+            total += self.n_layers * mlp_mult * d * self.d_ff
+        return total
+
+    def n_active_params(self) -> int:
+        """Activated params per token (MoE: routed top-k + shared only)."""
+        if not self.moe:
+            return self.n_params()
+        d = self.d_model
+        mlp_mult = 3 if self.mlp == "swiglu" else 2
+        total = self.n_params()
+        n_moe = self.n_layers - self.first_dense_layers
+        total -= n_moe * (self.n_routed + self.n_shared) * mlp_mult * d * self.d_ff
+        total += n_moe * (self.top_k + self.n_shared) * mlp_mult * d * self.d_ff
+        return total
+
+
+# --------------------------------------------------------------- GNN family
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    model: str                 # "pna" | "graphsage" | "gin" | "gat"
+    n_layers: int
+    d_hidden: int
+    n_heads: int = 1           # gat
+    aggregators: Tuple[str, ...] = ("mean",)
+    scalers: Tuple[str, ...] = ("identity",)
+    sample_sizes: Tuple[int, ...] = ()   # graphsage fanouts
+    eps_learnable: bool = False          # gin
+    dtype: str = "float32"
+    # perf knobs (§Perf): full-graph message passing over the engine's edge
+    # partition (shard_map + bucketed all_to_all) instead of GSPMD placement
+    distributed: bool = False
+    message_dtype: str = "float32"  # "bfloat16" halves the all_to_all payload
+
+    @property
+    def kind(self) -> str:
+        return "gnn"
+
+
+# ------------------------------------------------------------ RecSys family
+@dataclasses.dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    embed_dim: int
+    n_blocks: int
+    n_heads: int
+    seq_len: int
+    n_items: int = 1_000_000   # embedding table rows
+    dtype: str = "bfloat16"
+    # perf knobs (§Perf): 0 = paper-faithful full-catalog softmax
+    fused_ce: int = 0          # >0: blockwise CE over item chunks (exact)
+    n_negatives: int = 0       # >0: sampled-softmax with shared negatives
+
+    @property
+    def kind(self) -> str:
+        return "recsys"
+
+    def n_params(self) -> int:
+        d = self.embed_dim
+        per_block = 4 * d * d + 8 * d * d  # attn + 4x ffn
+        return self.n_items * d + self.n_blocks * per_block + self.seq_len * d
+
+
+# ------------------------------------------------------------------- shapes
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    """One assignment cell: what program to lower and with which sizes."""
+
+    name: str
+    step: str                  # "train" | "prefill" | "decode" | "serve" | "retrieval"
+    # lm
+    seq_len: int = 0
+    global_batch: int = 0
+    # gnn
+    n_nodes: int = 0
+    n_edges: int = 0
+    d_feat: int = 0
+    batch_nodes: int = 0
+    fanout: Tuple[int, ...] = ()
+    n_graphs: int = 0
+    # recsys
+    batch: int = 0
+    n_candidates: int = 0
+    skip: Optional[str] = None  # reason this cell is skipped (long_500k on full attn)
+
+
+LM_SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", seq_len=4096, global_batch=256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", seq_len=32768, global_batch=32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", seq_len=32768, global_batch=128),
+    "long_500k": ShapeSpec("long_500k", "decode", seq_len=524288, global_batch=1),
+}
+
+GNN_SHAPES = {
+    "full_graph_sm": ShapeSpec("full_graph_sm", "train", n_nodes=2708, n_edges=10556, d_feat=1433),
+    "minibatch_lg": ShapeSpec(
+        "minibatch_lg", "train", n_nodes=232965, n_edges=114615892,
+        batch_nodes=1024, fanout=(15, 10), d_feat=602,
+    ),
+    "ogb_products": ShapeSpec("ogb_products", "train", n_nodes=2449029, n_edges=61859140, d_feat=100),
+    "molecule": ShapeSpec("molecule", "train", n_nodes=30, n_edges=64, n_graphs=128, d_feat=16),
+}
+
+RECSYS_SHAPES = {
+    "train_batch": ShapeSpec("train_batch", "train", batch=65536),
+    "serve_p99": ShapeSpec("serve_p99", "serve", batch=512),
+    "serve_bulk": ShapeSpec("serve_bulk", "serve", batch=262144),
+    "retrieval_cand": ShapeSpec("retrieval_cand", "retrieval", batch=1, n_candidates=1_000_000),
+}

@@ -1,0 +1,32 @@
+"""The paper's primary contribution: pattern matching via constraint checking.
+
+Pipeline: Template -> constraints (LCC implicit + CC/PC/TDS) -> iterative
+pruning (Alg. 1) -> solution subgraph G* with per-vertex match lists omega ->
+optional match enumeration / counting on the pruned graph.
+"""
+from repro.core.template import Template, NonLocalConstraint, generate_constraints
+from repro.core.state import PruneState, init_state, pack_bits, unpack_bits
+from repro.core.lcc import TemplateDev, lcc_iteration, lcc_fixpoint
+from repro.core.pipeline import prune, PruneResult
+from repro.core.enumerate import enumerate_matches, EnumerationResult, template_walk
+from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
+
+__all__ = [
+    "Template",
+    "NonLocalConstraint",
+    "generate_constraints",
+    "PruneState",
+    "init_state",
+    "pack_bits",
+    "unpack_bits",
+    "TemplateDev",
+    "lcc_iteration",
+    "lcc_fixpoint",
+    "prune",
+    "PruneResult",
+    "enumerate_matches",
+    "EnumerationResult",
+    "template_walk",
+    "enumerate_matches_bruteforce",
+    "solution_subgraph_oracle",
+]

@@ -1,0 +1,78 @@
+"""Exploratory search (paper §5.4, Fig. 10): start from an over-constrained
+template and progressively relax it by removing edges until matches appear.
+
+Level k searches every connected k-edge-deleted variant; the system returns
+the union of matches at the first level with any match. Shares the candidate
+set and the non-local work-reuse cache across variants via IncrementalSession
+(the same constraint walks recur across variants — the paper's key enabler).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structs import Graph
+from repro.core.template import Template
+from repro.core.incremental import IncrementalSession
+
+
+@dataclasses.dataclass
+class LevelStat:
+    k: int
+    n_variants: int
+    matched_vertices: int
+    seconds: float
+    avg_seconds_per_variant: float
+
+
+@dataclasses.dataclass
+class ExploratoryResult:
+    found_level: Optional[int]
+    vertex_mask: np.ndarray
+    levels: List[LevelStat]
+    candidate_vertices: int
+
+
+def exploratory_search(
+    graph: Graph,
+    template: Template,
+    max_removals: Optional[int] = None,
+    max_variants_per_level: int = 4096,
+) -> ExploratoryResult:
+    session = IncrementalSession(graph, template)
+    cand_v = int(jnp.sum(jnp.any(session._cand.omega, axis=1)))
+    if max_removals is None:
+        max_removals = template.m0 - max(template.n0 - 1, 1)
+
+    levels: List[LevelStat] = []
+
+    # level 0: the original template
+    for k in range(0, max_removals + 1):
+        t0 = time.perf_counter()
+        variants = [template] if k == 0 else template.edge_deletion_variants(k)
+        variants = variants[:max_variants_per_level]
+        union = np.zeros(graph.n, dtype=bool)
+        for var in variants:
+            state, _ = session.search(var)
+            union |= np.asarray(jnp.any(state.omega, axis=1))
+        secs = time.perf_counter() - t0
+        levels.append(
+            LevelStat(
+                k=k, n_variants=len(variants),
+                matched_vertices=int(union.sum()), seconds=secs,
+                avg_seconds_per_variant=secs / max(len(variants), 1),
+            )
+        )
+        if union.any():
+            return ExploratoryResult(
+                found_level=k, vertex_mask=union, levels=levels,
+                candidate_vertices=cand_v,
+            )
+    return ExploratoryResult(
+        found_level=None, vertex_mask=np.zeros(graph.n, bool), levels=levels,
+        candidate_vertices=cand_v,
+    )

@@ -1,0 +1,177 @@
+"""Interactive incremental search (paper §5.4).
+
+Two enablers from the paper:
+
+  *candidate set* — a superset of the matches of every template obtainable from
+  the initial template by edge deletions, computed with local constraints only.
+  We realize it as a *relaxed LCC fixpoint*: a vertex keeps candidacy for q if
+  its label matches and at least one template neighbor of q is covered among
+  its neighbors (>=1 instead of all — every connected edge-deleted sub-template
+  still requires each non-isolated vertex to have >=1 matching neighbor, so
+  this is a sound superset). Searches then run inside the candidate set (PJI-X).
+
+  *work reuse* — non-local constraint outcomes are cached per constraint key:
+  a source that once satisfied constraint C on a *smaller* active state still
+  satisfies it on any superset state (walks only gain feasibility), so cached
+  PASS sets skip re-verification; only unknown sources are re-checked (PJI-Y).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structs import Graph, DeviceGraph
+from repro.core.template import Template, generate_constraints, NonLocalConstraint
+from repro.core.state import PruneState, init_state
+from repro.core.lcc import TemplateDev, lcc_fixpoint
+from repro.graph import segment_ops
+from repro.core import nlcc as nlcc_mod
+from repro.core import tds as tds_mod
+
+
+def candidate_set(dg: DeviceGraph, template: Template, max_iters: int = 100) -> PruneState:
+    """Relaxed-LCC fixpoint: the paper's candidate set (union over edge-deleted
+    sub-templates, local constraints only)."""
+    import jax
+
+    tdev = TemplateDev(template)
+    state = init_state(dg, template)
+
+    def body(carry):
+        st, _, it = carry
+        msgs = jnp.take(st.omega, dg.src, axis=0) & st.edge_active[:, None]
+        M = segment_ops.segment_or_bool(msgs, dg.dst, dg.n)
+        covered = M.astype(jnp.float32) @ tdev.adj0.T.astype(jnp.float32)  # [n, n0]
+        ok = covered > 0.5  # >=1 matching neighbor (relaxation)
+        omega = st.omega & ok
+        side = omega.astype(jnp.float32) @ tdev.adj0.astype(jnp.float32)
+        compat = (
+            jnp.sum(
+                jnp.take(side, dg.src, axis=0)
+                * jnp.take(omega, dg.dst, axis=0).astype(jnp.float32),
+                axis=-1,
+            )
+            > 0.5
+        )
+        ea = st.edge_active & compat
+        changed = jnp.any(omega != st.omega) | jnp.any(ea != st.edge_active)
+        return PruneState(omega=omega, edge_active=ea), changed, it + 1
+
+    def cond(carry):
+        _, changed, it = carry
+        return jnp.logical_and(changed, it < max_iters)
+
+    final, _, _ = jax.lax.while_loop(cond, body, (state, jnp.asarray(True), jnp.asarray(0)))
+    return final
+
+
+@dataclasses.dataclass
+class QueryStat:
+    template_edges: int
+    seconds: float
+    matched_vertices: int
+    constraints_checked: int
+    constraints_reused: int
+
+
+class IncrementalSession:
+    """Holds graph + candidate set + the non-local work-reuse cache."""
+
+    def __init__(
+        self,
+        graph: Graph,
+        base_template: Template,
+        use_candidate_set: bool = True,
+        use_work_reuse: bool = True,
+        wave: int = 1024,
+    ):
+        self.graph = graph
+        self.dg = DeviceGraph.from_host(graph)
+        self.label_freq = graph.label_frequency()
+        self.base = base_template
+        self.use_candidate_set = use_candidate_set
+        self.use_work_reuse = use_work_reuse
+        self.wave = wave
+        self._cand: Optional[PruneState] = (
+            candidate_set(self.dg, base_template) if use_candidate_set else None
+        )
+        # constraint key -> set of sources known to PASS (sound under state growth)
+        self._pass_cache: Dict[tuple, np.ndarray] = {}
+        self.history: List[QueryStat] = []
+
+    def _verify_with_reuse(
+        self, state: PruneState, c: NonLocalConstraint, template: Template
+    ) -> Tuple[PruneState, bool]:
+        """Verify one constraint, skipping cached-pass sources. Returns (state, reused?)."""
+        key = c.key()
+        cached = self._pass_cache.get(key) if self.use_work_reuse else None
+        omega = np.asarray(state.omega)
+        q0 = c.walk[0]
+        sources = np.flatnonzero(omega[:, q0])
+        unknown = sources if cached is None else sources[~np.isin(sources, cached)]
+        reused = cached is not None and unknown.size < sources.size
+
+        passed = np.zeros(self.dg.n, dtype=bool)
+        if cached is not None:
+            passed[cached[np.isin(cached, sources)]] = True
+        if unknown.size:
+            if c.kind in ("cycle", "path"):
+                # restrict token generation to unknown sources
+                st = state
+                cand = jnp.stack([st.omega[:, q] for q in c.walk], axis=0)
+                for off in range(0, unknown.size, self.wave):
+                    ids = unknown[off : off + self.wave]
+                    pad = self.wave - ids.size
+                    idsp = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+                    surv, _ = nlcc_mod.check_walk_constraint(
+                        self.dg, st, cand, c.is_cyclic, jnp.asarray(idsp, jnp.int32)
+                    )
+                    surv = np.asarray(surv)[: ids.size]
+                    passed[ids[surv]] = True
+            else:
+                sub = tds_mod.compact_active(self.dg, state)
+                surv, _, _ = tds_mod.tds_walk(sub, c.walk, unknown)
+                passed[unknown[surv]] = True
+        if self.use_work_reuse:
+            prev = self._pass_cache.get(key, np.zeros(0, np.int64))
+            self._pass_cache[key] = np.union1d(prev, np.flatnonzero(passed))
+        new_omega = state.omega.at[:, q0].set(state.omega[:, q0] & jnp.asarray(passed))
+        return PruneState(omega=new_omega, edge_active=state.edge_active), reused
+
+    def search(self, template: Template) -> Tuple[PruneState, QueryStat]:
+        """Prune for the (revised) template, reusing candidate set + cache."""
+        t0 = time.perf_counter()
+        tdev = TemplateDev(template)
+        if self._cand is not None and template.n0 == self.base.n0:
+            # paper's restriction: revisions add/remove edges over the same
+            # vertex set, so candidate-set omega columns align.
+            state = PruneState(
+                omega=self._cand.omega & init_state(self.dg, template).omega,
+                edge_active=self._cand.edge_active,
+            )
+        else:
+            state = init_state(self.dg, template)
+        state = lcc_fixpoint(self.dg, tdev, state)
+        constraints = generate_constraints(
+            template, label_freq=self.label_freq, guarantee_precision=False
+        )
+        reused_n = 0
+        for c in constraints:
+            before = state.counts()
+            state, reused = self._verify_with_reuse(state, c, template)
+            reused_n += int(reused)
+            if state.counts() != before:
+                state = lcc_fixpoint(self.dg, tdev, state)
+        stat = QueryStat(
+            template_edges=template.m0,
+            seconds=time.perf_counter() - t0,
+            matched_vertices=int(jnp.sum(jnp.any(state.omega, axis=1))),
+            constraints_checked=len(constraints),
+            constraints_reused=reused_n,
+        )
+        self.history.append(stat)
+        return state, stat

@@ -1,0 +1,126 @@
+"""Pseudo-dynamic load balancing (paper §4 + §5.3).
+
+The paper checkpoints the pruned state (active vertices/edges + omega),
+reshuffles the vertex-to-processor assignment to evenly distribute the
+*active* workload, and resumes — possibly on a smaller deployment (LB-16 /
+LB-1). Here:
+
+  - `imbalance_stats` quantifies the skew the paper characterizes ("half of
+    the matching edges reside on only 20 of 2,304 partitions"),
+  - `compact_and_repartition` rebuilds a balanced EdgePartition over only the
+    active subgraph, for the same or a different shard count P (elastic
+    scale-down/up = the paper's smaller-deployment scenario),
+  - checkpoint/restore round-trips through repro.checkpoint (atomic, manifest).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structs import Graph, DeviceGraph
+from repro.graph.partition import EdgePartition, partition_graph
+from repro.core.state import PruneState
+
+
+@dataclasses.dataclass
+class BalanceStats:
+    P: int
+    edges_per_shard: np.ndarray
+    vertices_per_shard: np.ndarray
+    max_over_mean_edges: float
+    gini_edges: float
+    shards_holding_half: int  # smallest #shards covering 50% of active edges
+
+
+def _gini(x: np.ndarray) -> float:
+    x = np.sort(x.astype(np.float64))
+    n = x.size
+    if n == 0 or x.sum() == 0:
+        return 0.0
+    cum = np.cumsum(x)
+    return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
+
+
+def imbalance_stats(g: Graph, state: Optional[PruneState], P: int,
+                    dg: Optional[DeviceGraph] = None) -> BalanceStats:
+    n_local = (g.n + P - 1) // P
+    if state is not None:
+        assert dg is not None
+        ea = np.asarray(state.edge_active)
+        vact = np.asarray(state.omega).any(axis=1)
+        src = np.asarray(dg.src)
+        dst = np.asarray(dg.dst)
+        keep = ea & vact[src] & vact[dst]
+        src = src[keep]
+        verts = np.flatnonzero(vact)
+    else:
+        src = g.src
+        verts = np.arange(g.n)
+    e_shard = np.bincount(src // n_local, minlength=P)
+    v_shard = np.bincount(verts // n_local, minlength=P)
+    order = np.sort(e_shard)[::-1]
+    cum = np.cumsum(order)
+    half = int(np.searchsorted(cum, cum[-1] * 0.5) + 1) if cum.size and cum[-1] > 0 else 0
+    return BalanceStats(
+        P=P,
+        edges_per_shard=e_shard,
+        vertices_per_shard=v_shard,
+        max_over_mean_edges=float(e_shard.max() / max(e_shard.mean(), 1e-9)),
+        gini_edges=_gini(e_shard),
+        shards_holding_half=half,
+    )
+
+
+def compact_active_graph(
+    g: Graph, dg: DeviceGraph, state: PruneState
+) -> Tuple[Graph, np.ndarray, np.ndarray]:
+    """Compact the solution subgraph to a fresh Graph.
+
+    Returns (graph, old_of_new vertex ids, omega over new ids)."""
+    vact = np.asarray(state.omega).any(axis=1)
+    ea = np.asarray(state.edge_active)
+    src, dst = np.asarray(dg.src), np.asarray(dg.dst)
+    keep = ea & vact[src] & vact[dst]
+    old_ids = np.flatnonzero(vact)
+    new_of_old = np.full(g.n, -1, np.int64)
+    new_of_old[old_ids] = np.arange(old_ids.size)
+    sub = Graph(
+        n=old_ids.size,
+        src=new_of_old[src[keep]],
+        dst=new_of_old[dst[keep]],
+        labels=g.labels[old_ids],
+    )
+    omega_new = np.asarray(state.omega)[old_ids]
+    return sub, old_ids, omega_new
+
+
+def balanced_shuffle(sub: Graph, seed: int = 0) -> Tuple[Graph, np.ndarray]:
+    """Random vertex re-id (the paper's reshuffle): destroys the skewed locality
+    so block partitioning becomes even. Returns (shuffled graph, perm) where
+    perm[new_id] = old_id."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(sub.n)  # new position of old id
+    inv = np.empty_like(perm)
+    inv[perm] = np.arange(sub.n)
+    g2 = Graph(n=sub.n, src=inv[sub.src], dst=inv[sub.dst], labels=sub.labels[perm])
+    return g2, perm
+
+
+def compact_and_repartition(
+    g: Graph, dg: DeviceGraph, state: PruneState, P: int, seed: int = 0
+) -> Tuple[Graph, EdgePartition, Dict]:
+    """Checkpoint-and-reshuffle onto P shards (elastic: any P)."""
+    sub, old_ids, omega_new = compact_active_graph(g, dg, state)
+    before = imbalance_stats(sub, None, P)
+    shuffled, perm = balanced_shuffle(sub, seed)
+    after = imbalance_stats(shuffled, None, P)
+    part = partition_graph(shuffled, P) if shuffled.m else None
+    return shuffled, part, {
+        "old_ids": old_ids[perm],
+        "omega": omega_new[perm],
+        "imbalance_before": before,
+        "imbalance_after": after,
+    }

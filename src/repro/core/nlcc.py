@@ -1,0 +1,268 @@
+"""Non-local Constraint Checking for cycle and path constraints (Alg. 5 + 6).
+
+TPU adaptation of token passing: a *multi-source boolean frontier*
+F_r[v, s] = "a token that originated at source s sits at v after r hops".
+One hop is the same edge sweep as LCC (gather over arcs, OR by destination),
+masked per hop by the candidacy of the walk's r-th template vertex.
+
+Work aggregation (paper Alg. 6 line 14) is implicit and *maximal* here: the
+boolean frontier can represent a (vertex, source, hop) at most once, so a
+duplicate token can never be forwarded — the OR absorbs it. This is strictly
+stronger aggregation than the unordered-set dedup in the paper.
+
+Memory-pressure control (the paper's "ability to control processing rate"):
+sources are processed in fixed-size waves (`wave` bits), bounding frontier
+state at n x wave booleans per hop.
+
+Cycle constraints: token must return to its source after |C0| hops
+  -> survivor s iff F_L[source_s, s].
+Path constraints: token must reach a *different* vertex with the same label
+  -> survivor s iff exists v != source_s with F_L[v, s] (the paper's `ack`).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import DeviceGraph
+from repro.graph import segment_ops
+from repro.core.template import NonLocalConstraint
+from repro.core.state import PruneState
+
+
+def _frontier_hop(
+    dg: DeviceGraph,
+    frontier: jnp.ndarray,  # bool[n, S]
+    edge_active: jnp.ndarray,  # bool[m]
+    cand_next: jnp.ndarray,  # bool[n] candidacy for the next walk vertex
+    count_messages: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    msgs = jnp.take(frontier, dg.src, axis=0) & edge_active[:, None]
+    agg = segment_ops.segment_or_bool(msgs, dg.dst, frontier.shape[0])
+    nxt = agg & cand_next[:, None]
+    n_msgs = jnp.sum(msgs) if count_messages else jnp.asarray(0)
+    return nxt, n_msgs
+
+
+import functools
+
+
+@functools.partial(jax.jit, static_argnames=("is_cyclic", "count_messages"))
+def check_walk_constraint(
+    dg: DeviceGraph,
+    state: PruneState,
+    walk_candidacy: jnp.ndarray,  # bool[L+1, n] candidacy per walk position
+    is_cyclic: bool,
+    source_ids: jnp.ndarray,  # int32[S] background vertex ids (wave), -1 = pad
+    count_messages: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Verify one CC/PC wave. Returns (survived bool[S], message_count)."""
+    n = state.omega.shape[0]
+    S = source_ids.shape[0]
+    L = walk_candidacy.shape[0] - 1
+    safe_src = jnp.clip(source_ids, 0, n - 1)
+
+    frontier = jnp.zeros((n, S), dtype=bool)
+    frontier = frontier.at[safe_src, jnp.arange(S)].set(
+        (source_ids >= 0) & jnp.take(walk_candidacy[0], safe_src)
+    )
+    total_msgs = jnp.asarray(0)
+    for r in range(1, L + 1):
+        frontier, nm = _frontier_hop(
+            dg, frontier, state.edge_active, walk_candidacy[r], count_messages
+        )
+        total_msgs = total_msgs + nm
+
+    if is_cyclic:
+        survived = frontier[safe_src, jnp.arange(S)]
+    else:
+        # paper's ack: any arrival at a vertex different from the source
+        arrived_any = jnp.any(frontier, axis=0)
+        arrived_self = frontier[safe_src, jnp.arange(S)]
+        arrived_elsewhere = jnp.sum(frontier, axis=0) > arrived_self.astype(jnp.int32)
+        survived = arrived_any & arrived_elsewhere
+    return survived & (source_ids >= 0), total_msgs
+
+
+@functools.partial(jax.jit, static_argnames=("is_cyclic",))
+def walk_frontiers_and_edges(
+    dg: DeviceGraph,
+    state: PruneState,
+    walk_candidacy: jnp.ndarray,  # bool[L+1, n]
+    is_cyclic: bool,
+    source_ids: jnp.ndarray,      # int32[S], -1 = pad
+):
+    """Forward + backward frontiers for one wave (beyond-paper edge pruning).
+
+    F_r[v, s] = a token from source s sits at v after r hops (prefix exists).
+    B_r[v, s] = from v a valid suffix of length L-r completes for a SURVIVING
+                source s (computed by sweeping the reversed arcs, intersected
+                with F_r so only realizable states remain).
+
+    Returns (survived bool[S],
+             fwd_live bool[L, m]  — arc used at hop r lies on a full walk,
+             rev_live bool[L, m]  — the twin-direction usage of the same arc).
+    """
+    n = state.omega.shape[0]
+    S = source_ids.shape[0]
+    L = walk_candidacy.shape[0] - 1
+    safe_src = jnp.clip(source_ids, 0, n - 1)
+
+    frontier = jnp.zeros((n, S), dtype=bool)
+    frontier = frontier.at[safe_src, jnp.arange(S)].set(
+        (source_ids >= 0) & jnp.take(walk_candidacy[0], safe_src))
+    fwd = [frontier]
+    for r in range(1, L + 1):
+        frontier, _ = _frontier_hop(
+            dg, frontier, state.edge_active, walk_candidacy[r])
+        fwd.append(frontier)
+
+    if is_cyclic:
+        survived = fwd[L][safe_src, jnp.arange(S)] & (source_ids >= 0)
+        # walk must terminate at its own source
+        B = jnp.zeros((n, S), dtype=bool)
+        B = B.at[safe_src, jnp.arange(S)].set(survived)
+    else:
+        arrived_self = fwd[L][safe_src, jnp.arange(S)]
+        arrived_elsewhere = jnp.sum(fwd[L], axis=0) > arrived_self.astype(jnp.int32)
+        survived = jnp.any(fwd[L], axis=0) & arrived_elsewhere & (source_ids >= 0)
+        B = fwd[L] & survived[None, :]
+        B = B.at[safe_src, jnp.arange(S)].set(False)  # end vertex != source
+
+    fwd_live = []
+    rev_live = []
+    for r in range(L, 0, -1):
+        # arc (u -> v) used at hop r: prefix at u, suffix from v
+        fu = jnp.take(fwd[r - 1], dg.src, axis=0)
+        bv = jnp.take(B, dg.dst, axis=0)
+        live = jnp.any(fu & bv, axis=1) & state.edge_active
+        fwd_live.append(live)
+        # the twin arc (v -> u) realizes the same matched pair reversed
+        fu_t = jnp.take(fwd[r - 1], dg.dst, axis=0)
+        bv_t = jnp.take(B, dg.src, axis=0)
+        rev_live.append(jnp.any(fu_t & bv_t, axis=1) & state.edge_active)
+        # backward hop: B_{r-1}[u] = OR over out-arcs (u->v) of B_r[v], & F_{r-1}
+        msgs = jnp.take(B, dg.dst, axis=0) & state.edge_active[:, None]
+        agg = jax.ops.segment_sum(
+            msgs.astype(jnp.int32), dg.src, num_segments=n) > 0
+        B = agg & fwd[r - 1]
+    fwd_live = jnp.stack(fwd_live[::-1])   # [L, m], index r-1 = hop r
+    rev_live = jnp.stack(rev_live[::-1])
+    return survived, fwd_live, rev_live
+
+
+def verify_constraint(
+    dg: DeviceGraph,
+    state: PruneState,
+    constraint: NonLocalConstraint,
+    template_labels: np.ndarray,
+    wave: int = 1024,
+    stats: Optional[Dict] = None,
+    count_messages: bool = False,
+    edge_prune: bool = False,
+    template=None,
+) -> PruneState:
+    """Alg. 5 for CC/PC (+ each rotation for cycles): eliminate the head
+    template vertex from omega of every failing token source.
+
+    edge_prune=True (requires template) additionally eliminates arcs that lie
+    on NO completing walk for the template arcs this constraint covers — a
+    sound beyond-paper refinement (see walk_frontiers_and_edges): a true
+    match realizes every hop of the walk, so an arc that is never
+    (prefix-live, suffix-live) at any covering hop supports no match via
+    those template arcs."""
+    if edge_prune and template is not None:
+        state = _edge_prune_pass(dg, state, constraint, template, wave, stats)
+    walks = [constraint.walk]
+    if constraint.is_cyclic:
+        # a cycle constraint prunes the head only; verify every rotation
+        base = constraint.walk[:-1]
+        walks = [
+            tuple(base[i:] + base[:i]) + (base[i],) for i in range(len(base))
+        ]
+    else:
+        walks = [constraint.walk, tuple(reversed(constraint.walk))]
+
+    omega = state.omega
+    for walk in walks:
+        q0 = walk[0]
+        cand = jnp.stack([omega[:, q] for q in walk], axis=0)  # bool[L+1, n]
+        sources = np.flatnonzero(np.asarray(omega[:, q0]))
+        if sources.size == 0:
+            continue
+        keep = np.zeros(omega.shape[0], dtype=bool)
+        for off in range(0, sources.size, wave):
+            ids = sources[off : off + wave]
+            pad = wave - ids.size
+            ids_padded = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+            survived, n_msgs = check_walk_constraint(
+                dg, PruneState(omega=omega, edge_active=state.edge_active),
+                cand, walk[0] == walk[-1], jnp.asarray(ids_padded, jnp.int32),
+                count_messages=count_messages,
+            )
+            survived = np.asarray(survived)[: ids.size]
+            keep[ids[survived]] = True
+            if stats is not None:
+                stats["nlcc_messages"] = stats.get("nlcc_messages", 0) + int(n_msgs)
+                stats["nlcc_tokens"] = stats.get("nlcc_tokens", 0) + int(ids.size)
+        # remove q0 candidacy from failing sources (Alg. 5 line 8)
+        fail = np.asarray(omega[:, q0]) & ~keep
+        omega = omega.at[:, q0].set(omega[:, q0] & jnp.asarray(~fail))
+    return PruneState(omega=omega, edge_active=state.edge_active)
+
+
+def _edge_prune_pass(
+    dg: DeviceGraph,
+    state: PruneState,
+    constraint: NonLocalConstraint,
+    template,
+    wave: int,
+    stats: Optional[Dict],
+) -> PruneState:
+    """Forward-backward frontier edge elimination for one CC/PC constraint."""
+    walk = list(constraint.walk)
+    l = len(walk) - 1
+    omega = state.omega
+    cand = jnp.stack([omega[:, q] for q in walk], axis=0)
+    sources = np.flatnonzero(np.asarray(omega[:, walk[0]]))
+    if sources.size == 0:
+        return state
+    m = dg.m
+    live_f = np.zeros((l, m), dtype=bool)
+    live_r = np.zeros((l, m), dtype=bool)
+    for off in range(0, sources.size, wave):
+        ids = sources[off: off + wave]
+        pad = wave - ids.size
+        idsp = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+        _, fl, rl = walk_frontiers_and_edges(
+            dg, state, cand, constraint.is_cyclic, jnp.asarray(idsp, jnp.int32))
+        live_f |= np.asarray(fl)
+        live_r |= np.asarray(rl)
+
+    pairs = list(zip(walk[:-1], walk[1:]))
+    covered: Dict[tuple, list] = {}
+    for i, (qa, qb) in enumerate(pairs):
+        covered.setdefault((qa, qb), []).append(("f", i))
+        covered.setdefault((qb, qa), []).append(("r", i))
+
+    om = np.asarray(omega)
+    src, dst = np.asarray(dg.src), np.asarray(dg.dst)
+    support = np.zeros(m, dtype=bool)
+    for qa in range(template.n0):
+        for qb in template.adj[qa]:
+            lcc_rule = om[src, qa] & om[dst, qb]
+            if (qa, qb) in covered:
+                live = np.zeros(m, dtype=bool)
+                for kind, i in covered[(qa, qb)]:
+                    live |= live_f[i] if kind == "f" else live_r[i]
+                support |= lcc_rule & live
+            else:
+                support |= lcc_rule
+    new_ea = np.asarray(state.edge_active) & support
+    if stats is not None:
+        stats["nlcc_edges_pruned"] = stats.get("nlcc_edges_pruned", 0) + int(
+            np.sum(np.asarray(state.edge_active)) - np.sum(new_ea))
+    return PruneState(omega=omega, edge_active=jnp.asarray(new_ea))

@@ -1,0 +1,223 @@
+"""Template-Driven Search: constrained walks with history (paper §3 + Alg. 6).
+
+TDS verifies walks whose tokens carry the ordered list `t` of visited vertices
+so that revisits ("previously visited vertices are revisited as expected") and
+bijectivity (distinct template vertices -> distinct background vertices) can be
+enforced — the part of Def. 1 that bitset frontiers cannot express.
+
+TPU/SPMD adaptation: by the time TDS runs, the graph has been pruned by
+LCC/CC/PC (the paper's whole point — TDS operates on the much smaller G*), so
+we *compact the active subgraph* and run a vectorized multi-source join:
+
+  rows = partial assignments  int32[K, n_seen]
+  step r: expand the frontier column along active CSR edges (np.repeat-based
+          ragged expansion), filter by omega-candidacy + injectivity, or check
+          the revisit edge when walk[r] was already assigned,
+  then work-aggregate: np.unique(rows) — dedup of identical partial
+  assignments, the exact analogue of Alg. 6's tau(v) dedup set.
+
+Memory-pressure control (paper's token-generation rate control): sources are
+processed in chunks; a chunk aborts with `TdsOverflow` if rows exceed
+`max_rows`, and the caller retries with a smaller chunk.
+
+The same engine powers full match enumeration (complete template walk,
+keep all completions) — see core/enumerate.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.structs import DeviceGraph
+from repro.core.state import PruneState
+from repro.core.template import Template, NonLocalConstraint
+
+
+class TdsOverflow(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class ActiveSubgraph:
+    """Host-side compacted view of the current solution subgraph G*."""
+
+    n: int  # original vertex count (ids are NOT re-numbered; keeps omega alignment)
+    offsets: np.ndarray  # int64[n+1] CSR over active arcs
+    neighbors: np.ndarray  # int32[#active arcs]
+    omega: np.ndarray  # bool[n, n0]
+    edge_keys: np.ndarray  # sorted int64 keys src*n+dst of active arcs
+
+
+def compact_active(dg: DeviceGraph, state: PruneState) -> ActiveSubgraph:
+    src = np.asarray(dg.src)
+    dst = np.asarray(dg.dst)
+    omega = np.asarray(state.omega)
+    ea = np.asarray(state.edge_active)
+    vact = omega.any(axis=1)
+    keep = ea & vact[src] & vact[dst]
+    s, d = src[keep], dst[keep]
+    order = np.lexsort((d, s))
+    s, d = s[order], d[order]
+    n = dg.n
+    offsets = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(offsets, s + 1, 1)
+    np.cumsum(offsets, out=offsets)
+    keys = s.astype(np.int64) * n + d
+    return ActiveSubgraph(n=n, offsets=offsets, neighbors=d, omega=omega,
+                          edge_keys=np.sort(keys))
+
+
+def _ragged_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate [starts[i], starts[i]+counts[i]) ranges — vectorized."""
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    reset = np.repeat(starts - np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+    return np.arange(total, dtype=np.int64) + reset
+
+
+def _has_edge(sub: ActiveSubgraph, u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    keys = u.astype(np.int64) * sub.n + v
+    pos = np.searchsorted(sub.edge_keys, keys)
+    pos = np.minimum(pos, sub.edge_keys.shape[0] - 1)
+    return (sub.edge_keys.shape[0] > 0) & (sub.edge_keys[pos] == keys)
+
+
+def tds_walk(
+    sub: ActiveSubgraph,
+    walk: Sequence[int],
+    sources: np.ndarray,
+    max_rows: int = 2_000_000,
+    collect_rows: bool = False,
+    stats: Optional[Dict] = None,
+    dedup: bool = True,
+) -> Tuple[np.ndarray, Optional[np.ndarray], List[int]]:
+    """Run one TDS walk from the given sources.
+
+    Returns (survived mask over `sources`, completed rows or None, seen_q order).
+    Rows columns follow `seen_q` = template vertices in order of first visit.
+    """
+    walk = list(walk)
+    q0 = walk[0]
+    seen_q: List[int] = [q0]
+    src_ok = sub.omega[sources, q0]
+    rows = sources[src_ok].astype(np.int32).reshape(-1, 1)
+
+    for r in range(1, len(walk)):
+        if rows.shape[0] == 0:
+            break
+        q_prev, q_next = walk[r - 1], walk[r]
+        cur = rows[:, seen_q.index(q_prev)]
+        if q_next in seen_q:
+            tgt = rows[:, seen_q.index(q_next)]
+            keep = _has_edge(sub, cur, tgt)
+            rows = rows[keep]
+        else:
+            starts = sub.offsets[cur]
+            counts = (sub.offsets[cur + 1] - starts).astype(np.int64)
+            flat = _ragged_ranges(starts, counts)
+            rep = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
+            nbr = sub.neighbors[flat]
+            keep = sub.omega[nbr, q_next]
+            # injectivity: new vertex differs from every assigned one
+            for c in range(len(seen_q)):
+                keep &= nbr != rows[rep, c]
+            rows = np.concatenate(
+                [rows[rep[keep]], nbr[keep, None].astype(np.int32)], axis=1
+            )
+            seen_q.append(q_next)
+            if rows.shape[0] > max_rows:
+                raise TdsOverflow(
+                    f"TDS frontier {rows.shape[0]} > max_rows={max_rows} at step {r}"
+                )
+        # work aggregation: dedup identical partial assignments
+        if dedup and rows.shape[0] > 1:
+            before = rows.shape[0]
+            rows = np.unique(rows, axis=0)
+            if stats is not None:
+                stats["tds_dedup_dropped"] = stats.get("tds_dedup_dropped", 0) + (
+                    before - rows.shape[0]
+                )
+        if stats is not None:
+            stats["tds_rows_max"] = max(stats.get("tds_rows_max", 0), int(rows.shape[0]))
+            stats["tds_expansions"] = stats.get("tds_expansions", 0) + int(rows.shape[0])
+
+    survived_src = np.unique(rows[:, 0]) if rows.shape[0] else np.zeros(0, np.int32)
+    survived = np.isin(sources, survived_src)
+    return survived, (rows if collect_rows else None), seen_q
+
+
+def verify_tds_constraint(
+    dg: DeviceGraph,
+    state: PruneState,
+    constraint: NonLocalConstraint,
+    chunk: int = 4096,
+    max_rows: int = 2_000_000,
+    stats: Optional[Dict] = None,
+    annotate: bool = False,
+    dedup: bool = True,
+) -> PruneState:
+    """Alg. 5 with a TDS walk: prune head candidacy of failing sources.
+
+    With annotate=True (complete walks only) omega is *replaced* by the exact
+    set of (v, q) pairs participating in completed walks — the paper's
+    'list of possible matches' by-product that guarantees zero false positives.
+    """
+    import jax.numpy as jnp
+
+    sub = compact_active(dg, state)
+    q0 = constraint.walk[0]
+    sources = np.flatnonzero(sub.omega[:, q0])
+    survived_all = np.zeros(sub.n, dtype=bool)
+    confirmed = np.zeros_like(sub.omega) if annotate else None
+    confirmed_arc_keys: list = []
+
+    walk_pairs = sorted({(min(a, b), max(a, b))
+                         for a, b in zip(constraint.walk[:-1], constraint.walk[1:])})
+
+    off = 0
+    cur_chunk = chunk
+    while off < sources.size:
+        ids = sources[off : off + cur_chunk]
+        try:
+            surv, rows, seen_q = tds_walk(
+                sub, constraint.walk, ids, max_rows=max_rows,
+                collect_rows=annotate, stats=stats, dedup=dedup,
+            )
+        except TdsOverflow:
+            if cur_chunk == 1:
+                raise
+            cur_chunk = max(1, cur_chunk // 4)  # paper's rate control
+            continue
+        survived_all[ids[surv]] = True
+        if annotate and rows is not None and rows.shape[0]:
+            col = {q: c for c, q in enumerate(seen_q)}
+            for c, q in enumerate(seen_q):
+                confirmed[rows[:, c], q] = True
+            # confirmed edges: every template edge of every completed walk
+            for a, b in walk_pairs:
+                u, v = rows[:, col[a]].astype(np.int64), rows[:, col[b]].astype(np.int64)
+                confirmed_arc_keys.append(np.unique(u * sub.n + v))
+                confirmed_arc_keys.append(np.unique(v * sub.n + u))
+        off += ids.size
+    omega = np.asarray(state.omega).copy()
+    omega[:, q0] &= survived_all
+    edge_active = state.edge_active
+    if annotate:
+        if not constraint.complete:
+            raise ValueError("annotate requires a complete walk")
+        omega = confirmed & np.asarray(state.omega)
+        # exact edge set (paper: the output G* contains only edges of matches)
+        keys = (
+            np.unique(np.concatenate(confirmed_arc_keys))
+            if confirmed_arc_keys
+            else np.zeros(0, np.int64)
+        )
+        arc_keys = np.asarray(dg.src).astype(np.int64) * sub.n + np.asarray(dg.dst)
+        pos = np.searchsorted(keys, arc_keys)
+        pos = np.minimum(pos, max(keys.shape[0] - 1, 0))
+        exact = (keys.shape[0] > 0) & (keys[pos] == arc_keys) if keys.shape[0] else np.zeros(arc_keys.shape[0], bool)
+        edge_active = state.edge_active & jnp.asarray(exact)
+    return PruneState(omega=jnp.asarray(omega), edge_active=edge_active)

@@ -1,0 +1,5 @@
+from repro.data.tokens import SyntheticTokenStream  # noqa: F401
+from repro.data.recsys import MaskedSequenceStream  # noqa: F401
+from repro.data.graphs import (  # noqa: F401
+    full_graph_batch, molecule_batch, SampledBatchStream, PatternFilteredDataset,
+)

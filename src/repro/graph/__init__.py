@@ -1,0 +1,34 @@
+"""Graph substrate: structures, generators, partitioning, sampling, segment ops.
+
+This layer is shared by the paper's pattern-matching engine (repro.core) and the
+GNN model family — both are edge-sweep message-passing workloads on TPU.
+"""
+from repro.graph.structs import Graph, DeviceGraph
+from repro.graph.generators import (
+    rmat_graph,
+    erdos_renyi_graph,
+    cycle_graph,
+    torus_graph,
+    star_graph,
+    degree_labels,
+    random_labels,
+)
+from repro.graph.partition import EdgePartition, partition_graph
+from repro.graph.sampler import NeighborSampler
+from repro.graph import segment_ops
+
+__all__ = [
+    "Graph",
+    "DeviceGraph",
+    "rmat_graph",
+    "erdos_renyi_graph",
+    "cycle_graph",
+    "torus_graph",
+    "star_graph",
+    "degree_labels",
+    "random_labels",
+    "EdgePartition",
+    "partition_graph",
+    "NeighborSampler",
+    "segment_ops",
+]

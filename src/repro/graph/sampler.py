@@ -1,0 +1,67 @@
+"""Layered uniform neighbor sampler (GraphSAGE-style fanout sampling).
+
+Host-side numpy over CSR — this is the real data-pipeline component feeding
+`minibatch_lg` GNN training. Output blocks have *static* shapes (padded) so the
+jitted train step compiles once; `block_shapes` gives the same shapes for
+dry-runs without touching data.
+
+Block layout for L layers with fanouts (f_1 .. f_L), seed batch size S:
+  layer 0 nodes: S seeds
+  layer l nodes: S * f_1 * ... * f_l sampled endpoints (with replacement when
+                 degree > 0; repeated nodes allowed, exactly like the original
+                 GraphSAGE sampler), padded with a sentinel when degree == 0.
+Edges between layer l and l-1 are implicit: child i at layer l connects to
+parent i // f_l at layer l-1 — a static segment structure, so aggregation in
+the model is a plain reshape + mean/max, no scatter needed.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.structs import Graph
+
+
+class NeighborSampler:
+    def __init__(self, g: Graph, fanouts: Sequence[int], seed: int = 0):
+        self.fanouts = tuple(int(f) for f in fanouts)
+        self.offsets, self.neighbors = g.csr()
+        self.n = g.n
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray) -> List[np.ndarray]:
+        """Returns [layer0 nodes, layer1 nodes, ...]; layer l has S * prod(f_1..f_l) ids.
+
+        Zero-degree nodes self-sample (their own id), which the models treat as a
+        mean over a single self message — standard practice.
+        """
+        layers = [np.asarray(seeds, dtype=np.int32)]
+        for f in self.fanouts:
+            parents = layers[-1]
+            deg = (self.offsets[parents + 1] - self.offsets[parents]).astype(np.int64)
+            r = self.rng.integers(0, 1 << 62, size=(parents.shape[0], f))
+            pick = np.where(deg[:, None] > 0, r % np.maximum(deg, 1)[:, None], 0)
+            base = self.offsets[parents][:, None]
+            idx = base + pick
+            sampled = np.where(
+                deg[:, None] > 0,
+                self.neighbors[np.minimum(idx, self.neighbors.shape[0] - 1)],
+                parents[:, None],
+            ).astype(np.int32)
+            layers.append(sampled.reshape(-1))
+        return layers
+
+    def sample_batch(self, batch_size: int) -> List[np.ndarray]:
+        seeds = self.rng.integers(0, self.n, size=batch_size).astype(np.int32)
+        return self.sample(seeds)
+
+
+def block_shapes(batch: int, fanouts: Sequence[int]) -> List[Tuple[int]]:
+    shapes, size = [], batch
+    out = [(size,)]
+    for f in fanouts:
+        size *= f
+        out.append((size,))
+    del shapes
+    return out

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the performance-critical compute layers.
+
+  bitset_spmm     — blocked bit-packed OR-SpMM: the LCC/NLCC edge sweep
+  segment_agg     — fused 4-way GNN neighborhood aggregation (PNA bank)
+  flash_attention — causal/GQA/sliding-window attention (LM hot loop)
+  embedding_bag   — scalar-prefetch gather + VMEM bag reduce (recsys hot loop)
+
+Use through `repro.kernels.ops` (jit'd wrappers, TPU->pallas / CPU->ref
+dispatch); `repro.kernels.ref` holds the pure-jnp oracles.
+"""
+from repro.kernels import ops, ref  # noqa: F401

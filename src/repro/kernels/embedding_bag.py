@@ -1,0 +1,77 @@
+"""`embedding_bag` — gather + in-VMEM bag reduction for the recsys hot path.
+
+JAX has no native EmbeddingBag; the reference path is jnp.take +
+segment_sum, which round-trips the gathered [B*L, D] tensor through HBM.
+This kernel streams table rows straight into a VMEM accumulator:
+
+  grid = (B * L,)  — one (bag, slot) per step, sequential
+  the ids are *scalar-prefetched*, and the table BlockSpec index map uses
+  ids[i] directly: the pipeline prefetches exactly the rows it needs from the
+  (huge, HBM-resident, vocab-sharded) table. The bag accumulator lives in
+  VMEM scratch; the out block (index i // L) is revisited for L consecutive
+  steps and written each step — final at the bag's last slot.
+
+Padding slots use id 0 with weight 0 (host-side contract), so they add the
+identity. `mode="mean"` divides by the (prefetched) bag length.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(ids_ref, weights_ref, counts_ref, row_ref, out_ref, acc_ref, *, l, mean):
+    i = pl.program_id(0)
+    slot = i % l
+
+    @pl.when(slot == 0)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    w = weights_ref[i]
+    acc_ref[...] += row_ref[...].astype(jnp.float32) * w
+    scale = 1.0
+    if mean:
+        scale = 1.0 / jnp.maximum(counts_ref[i // l].astype(jnp.float32), 1.0)
+    out_ref[...] = (acc_ref[...] * scale).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def embedding_bag(
+    table: jnp.ndarray,    # [V, D]
+    ids: jnp.ndarray,      # int32[B, L]   (padding: id 0)
+    weights: jnp.ndarray,  # f32[B, L]     (padding: 0.0)
+    *,
+    mode: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    assert mode in ("sum", "mean")
+    bsz, l = ids.shape
+    v, d = table.shape
+    flat_ids = ids.reshape(-1)
+    flat_w = weights.reshape(-1)
+    counts = jnp.sum((weights != 0.0).astype(jnp.int32), axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # ids, weights, counts
+        grid=(bsz * l,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, ids, w, c: (ids[i], 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i, ids, w, c: (i // l, 0)),
+        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, l=l, mean=(mode == "mean"))
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",),
+        ),
+        interpret=interpret,
+    )(flat_ids, flat_w, counts, table)

@@ -1,0 +1,130 @@
+"""Flash attention (forward) — Pallas TPU kernel with BlockSpec VMEM tiling.
+
+Supports causal masking, GQA (kv_heads <= q_heads resolved in the K/V
+BlockSpec index maps — no materialized head repeat), and sliding-window
+attention (StarCoder2's sub-quadratic regime for long_500k).
+
+Grid: (batch, q_heads, num_q_blocks, num_kv_blocks) with the kv dimension
+innermost ("arbitrary" — carries the online-softmax state); the first three
+dims are embarrassingly parallel. Online softmax state per q block:
+  m   f32[bq, MIN_LANE]  running row max (lane-replicated)
+  l   f32[bq, MIN_LANE]  running denominator
+  acc f32[bq, d]         unnormalized output
+Output is normalized and written at the last kv step of each q block.
+
+VMEM per step (bq=bk=128, d=128): q/k/v tiles 3x64 KiB bf16 + acc 64 KiB f32
++ state — well inside VMEM; both matmuls are 128x128x128 MXU-aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+MIN_LANE = 128
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                 *, scale, causal, window, bq, bk, num_kv_blocks):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    live = jnp.ones((bq, bk), dtype=bool)
+    if causal:
+        live &= q_pos >= k_pos
+    if window is not None:
+        live &= k_pos > q_pos - window
+
+    # Entire tile masked out (strict upper triangle / outside the window):
+    # skip the matmuls, state is unchanged.
+    block_live = True
+    if causal:
+        block_live = jnp.logical_and(block_live, qi * bq + bq - 1 >= ki * bk)
+    if window is not None:
+        block_live = jnp.logical_and(block_live, ki * bk + bk - 1 > qi * bq - window)
+
+    @pl.when(block_live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [bq, bk]
+        s = jnp.where(live, s, NEG_INF)
+        m_prev = m_ref[...]                                  # [bq, MIN_LANE]
+        m_cur = jnp.max(s, axis=1, keepdims=True)            # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        alpha = jnp.exp(m_prev[:, :1] - m_new[:, :1])        # [bq, 1]
+        p = jnp.exp(s - m_new[:, :1])                        # [bq, bk]
+        l_ref[...] = l_ref[...] * alpha + jnp.broadcast_to(
+            jnp.sum(p, axis=1, keepdims=True), l_ref.shape)
+        v = v_ref[0, 0].astype(jnp.float32)                  # [bk, d]
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = m_new
+
+    @pl.when(ki == num_kv_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[:, :1], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, S, D]
+    k: jnp.ndarray,  # [B, Hkv, S, D]
+    v: jnp.ndarray,  # [B, Hkv, S, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, "GQA requires q_heads % kv_heads == 0"
+    group = hq // hkv
+    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / (d ** 0.5)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        bq=block_q, bk=block_k, num_kv_blocks=nk,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

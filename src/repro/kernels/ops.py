@@ -1,0 +1,127 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Dispatch contract: on TPU backends the `pl.pallas_call` kernels run compiled;
+everywhere else the pure-jnp oracle from ref.py is used (identical numerics
+contract — kernel tests enforce allclose). Tests may force the kernel path in
+interpret mode with force_pallas=True.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.blocked import BlockedStructure, masks_from_active, pad_values
+from repro.kernels import ref as _ref
+from repro.kernels.bitset_spmm import bitset_spmm as _bitset_spmm_pallas
+from repro.kernels.segment_agg import segment_agg as _segment_agg_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.embedding_bag import embedding_bag as _embedding_bag_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ------------------------------------------------------------- bitset_spmm
+def bitset_or_aggregate(
+    vals: jnp.ndarray,          # uint32[n, W] packed per-vertex words
+    dg_src: jnp.ndarray,        # int32[m] dst-sorted
+    dg_dst: jnp.ndarray,
+    n: int,
+    edge_active: jnp.ndarray,   # bool[m]
+    blocked: Optional[BlockedStructure] = None,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """OR-aggregate packed words along active arcs -> uint32[n, W]."""
+    if blocked is not None and (force_pallas or _on_tpu()):
+        masks = masks_from_active(blocked, edge_active)
+        out = _bitset_spmm_pallas(
+            jnp.asarray(blocked.pairs), masks, pad_values(vals, blocked),
+            bn=blocked.bn, n_pad=blocked.n_pad, interpret=not _on_tpu(),
+        )
+        # dst blocks with no adjacency block are never visited by the grid
+        touched = np.zeros(blocked.n_pad // blocked.bn, dtype=bool)
+        touched[blocked.pairs[:, 0]] = True
+        trow = jnp.repeat(jnp.asarray(touched), blocked.bn)[:, None]
+        return jnp.where(trow, out, jnp.uint32(0))[:n]
+    return _ref.bitset_spmm_ref(vals, dg_src, dg_dst, n, edge_active)
+
+
+# ------------------------------------------------------------- segment_agg
+def neighborhood_agg(
+    feats: jnp.ndarray,   # [NT, D, F] gathered neighbor features
+    mask: jnp.ndarray,    # bool[NT, D]
+    degrees: jnp.ndarray,  # f32[NT] true degrees (for mean/std)
+    force_pallas: bool = False,
+) -> dict:
+    """Fused sum/mean/min/max/std neighborhood aggregation (PNA's bank)."""
+    nt, d, f = feats.shape
+    use_kernel = force_pallas or _on_tpu()
+    if use_kernel and nt % 8 == 0 and f % 128 == 0:
+        raw = _segment_agg_pallas(feats, mask, interpret=not _on_tpu())
+    else:
+        raw = _ref.segment_agg_ref(feats, mask)
+    s, mn, mx, sq = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
+    deg = jnp.maximum(degrees, 1.0)[:, None]
+    empty = (degrees <= 0)[:, None]
+    mean = s / deg
+    var = jnp.maximum(sq / deg - mean * mean, 0.0)
+    zero = jnp.zeros_like(s)
+    return {
+        "sum": s,
+        "mean": mean,
+        "min": jnp.where(empty, zero, mn),
+        "max": jnp.where(empty, zero, mx),
+        # +eps: sqrt has an infinite derivative at 0 (NaN in backward)
+        "std": jnp.sqrt(var + 1e-12),
+    }
+
+
+# --------------------------------------------------------- flash_attention
+def attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    s = q.shape[2]
+    same_dims = q.shape[3] == v.shape[3]
+    usable = s % block_q == 0 and s % block_k == 0 and q.shape[3] >= 128 and same_dims
+    if (force_pallas or _on_tpu()) and usable:
+        return _flash_pallas(
+            q, k, v, causal=causal, window=window,
+            block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
+        )
+    if s > 2048:
+        # flash-semantics XLA path: O(S * block) live memory; this is what the
+        # dry-run lowers for long sequences on non-TPU backends (and the MLA
+        # d_qk != d_v case everywhere).
+        return _ref.attention_blockwise(q, k, v, causal=causal, window=window)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+# ----------------------------------------------------------- embedding_bag
+def embedding_bag(
+    table: jnp.ndarray,
+    ids: jnp.ndarray,
+    weights: Optional[jnp.ndarray] = None,
+    *,
+    mode: str = "sum",
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    if force_pallas or _on_tpu():
+        return _embedding_bag_pallas(
+            table, ids, weights, mode=mode, interpret=not _on_tpu()
+        )
+    return _ref.embedding_bag_ref(table, ids, weights, mode=mode)

@@ -1,0 +1,3 @@
+"""Launch layer: meshes, cell builders, the multi-pod dry-run, and the
+train/serve entry points. NOTE: importing this package must not initialize
+jax devices (dryrun.py sets XLA_FLAGS before any jax import)."""

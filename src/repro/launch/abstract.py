@@ -1,0 +1,61 @@
+"""Abstract (allocation-free) state construction + sharding resolution.
+
+`abstract_init` traces an init function with jax.eval_shape so the full
+production-scale state exists only as ShapeDtypeStructs; the logical spec
+tree (static python, built during tracing) is captured via a side box.
+
+`shardings_for` resolves logical axes -> NamedShardings against a mesh with a
+divisibility guard: a mesh axis that does not divide the dimension is dropped
+(e.g. 4 kv heads cannot shard over model=16; batch=1 cannot shard at all).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.sharding import DEFAULT_RULES, logical_to_physical
+
+
+def abstract_init(fn: Callable, rng, *static_args, **static_kwargs) -> Tuple[Any, Any]:
+    """fn(rng, *static_args, **static_kwargs) must return
+    (arrays_pytree, spec_pytree). Returns (sds_tree, specs) without allocating
+    anything — only the rng is traced; configs stay static (closed over)."""
+    box = {}
+
+    def wrapper(k):
+        out, specs = fn(k, *static_args, **static_kwargs)
+        box["specs"] = specs
+        return out
+
+    sds = jax.eval_shape(wrapper, rng)
+    return sds, box["specs"]
+
+
+def _is_spec_leaf(x):
+    return (isinstance(x, tuple)
+            and all(a is None or isinstance(a, str) for a in x))
+
+
+def resolve_spec(sds, logical, mesh: Mesh, rules=None) -> P:
+    """Logical axes -> PartitionSpec, dropping axes that don't divide dims."""
+    from repro.sharding import resolve_axis_spec
+    return resolve_axis_spec(getattr(sds, "shape", ()), logical, mesh, rules)
+
+
+def shardings_for(sds_tree, spec_tree, mesh: Mesh, rules=None):
+    """Pytree of NamedShardings matching sds_tree's structure."""
+    flat_sds, treedef = jax.tree_util.tree_flatten(sds_tree)
+    flat_spec = treedef.flatten_up_to(spec_tree) if spec_tree is not None else [
+        () for _ in flat_sds]
+    out = []
+    for sds, logical in zip(flat_sds, flat_spec):
+        if not _is_spec_leaf(logical):
+            logical = ()
+        out.append(NamedSharding(mesh, resolve_spec(sds, logical, mesh, rules)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(sds_tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), sds_tree)

@@ -1,0 +1,447 @@
+"""Cell builders: (arch x input-shape x mesh) -> a lowerable jitted program
+with allocation-free ShapeDtypeStruct arguments and resolved shardings.
+
+Every assignment cell maps to one of:
+  lm train      — build_train_step over microbatched token batches (FSDP+TP,
+                  remat, grad accumulation; bf16 optimizer state for the
+                  largest configs)
+  lm prefill    — forward_hidden + last-position logits
+  lm decode     — one serve_step over the KV cache (ring buffer when windowed)
+  gnn train     — full-graph segment-op step (node/edge arrays padded to the
+                  mesh size) or the sampled-fanout step (graphsage) /
+                  sampled-subgraph step (other GNNs) for minibatch_lg
+  recsys train  — masked-item step; serve — top-k catalog scoring;
+                  retrieval — 1 user x 1M candidates matmul
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch
+from repro.configs.base import LMConfig, GNNConfig, RecsysConfig, ShapeSpec
+from repro.launch.abstract import abstract_init, shardings_for, resolve_spec
+from repro.launch.mesh import mesh_chips
+from repro.optim.adamw import AdamWConfig
+from repro import train as train_lib
+from repro.models import transformer, gnn, bert4rec
+from repro import serve as serve_lib
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    step_kind: str
+    fn: Callable
+    args_sds: Tuple
+    in_shardings: Tuple
+    out_shardings: Any
+    mesh: Optional[Mesh] = None
+    donate_argnums: Tuple[int, ...] = ()
+    # roofline bookkeeping
+    model_flops_fn: Optional[Callable[[], float]] = None
+    note: str = ""
+
+    def lower(self):
+        from repro.sharding import active_mesh
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+        # install the mesh so the models' logical-axis constrain() annotations
+        # become real with_sharding_constraint ops during tracing
+        with active_mesh(self.mesh):
+            return jitted.lower(*self.args_sds)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult
+
+
+# per-arch training knobs (microbatches chosen so DP shards divide)
+LM_TRAIN_MICROBATCHES = 8
+LM_STATE_DTYPE = {  # bf16 moments for the config that must fit 512 chips
+    "deepseek-v3-671b": "bfloat16",
+}
+GNN_CLASSES = {"full_graph_sm": 7, "minibatch_lg": 41, "ogb_products": 47, "molecule": 2}
+
+
+# ------------------------------------------------------------------ LM cells
+def _lm_train_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    k = cfg.train_microbatches or LM_TRAIN_MICROBATCHES
+    gb, s = shape.global_batch, shape.seq_len
+    mb = gb // k
+    tc = train_lib.TrainConfig(
+        optimizer=AdamWConfig(state_dtype=LM_STATE_DTYPE.get(arch, "float32")),
+        microbatches=k, pre_microbatched=True,
+        remat=("dots" if cfg.remat_policy == "dots" else True),
+    )
+    state_sds, state_specs = abstract_init(
+        train_lib.init_state, jax.random.key(0), cfg, tc
+    )
+    batch_sds = {
+        "tokens": _sds((k, mb, s), jnp.int32),
+        "labels": _sds((k, mb, s), jnp.int32),
+    }
+    batch_specs = {"tokens": (None, "batch", None), "labels": (None, "batch", None)}
+    state_sh = shardings_for(state_sds, state_specs, mesh)
+    batch_sh = shardings_for(batch_sds, batch_specs, mesh)
+    step = train_lib.build_train_step(cfg, tc)
+    metrics_sds = jax.eval_shape(step, state_sds, batch_sds)[1]
+    metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_sds)
+    tokens_per_step = gb * s
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="train_step",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        model_flops_fn=lambda: 6.0 * cfg.n_active_params() * tokens_per_step,
+    )
+
+
+def _lm_prefill_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    params_sds, pspecs = abstract_init(transformer.init, jax.random.key(0), cfg)
+    params_sh = shardings_for(params_sds, pspecs, mesh)
+    b, s = shape.global_batch, shape.seq_len
+
+    def prefill(params, tokens):
+        h, _ = transformer.forward_hidden(params, cfg, tokens, remat=True)
+        return transformer.logits_from_hidden(params, cfg, h[:, -1:, :])[:, 0]
+
+    tok_sds = _sds((b, s), jnp.int32)
+    tok_sh = NamedSharding(mesh, resolve_spec(tok_sds, ("batch", None), mesh))
+    out_sh = NamedSharding(mesh, resolve_spec(
+        _sds((b, cfg.vocab), jnp.float32), ("batch", None), mesh))
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="prefill",
+        fn=prefill, args_sds=(params_sds, tok_sds),
+        in_shardings=(params_sh, tok_sh), out_shardings=out_sh,
+        model_flops_fn=lambda: 2.0 * cfg.n_active_params() * b * s,
+    )
+
+
+def _lm_decode_cell(arch: str, cfg: LMConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    params_sds, pspecs = abstract_init(transformer.init, jax.random.key(0), cfg)
+    params_sh = shardings_for(params_sds, pspecs, mesh)
+    b, s = shape.global_batch, shape.seq_len
+    cache_sds = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s))
+    cache_sh = shardings_for(cache_sds, transformer.cache_specs(cfg), mesh)
+    tok_sds = _sds((b,), jnp.int32)
+    tok_sh = NamedSharding(mesh, resolve_spec(tok_sds, ("batch",), mesh))
+    step = serve_lib.build_decode_step(cfg)
+    logits_sh = NamedSharding(mesh, resolve_spec(
+        _sds((b, cfg.vocab), jnp.float32), ("batch", None), mesh))
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="serve_step",
+        fn=step, args_sds=(params_sds, cache_sds, tok_sds),
+        in_shardings=(params_sh, cache_sh, tok_sh),
+        out_shardings=(tok_sh, logits_sh, cache_sh),
+        donate_argnums=(1,),
+        model_flops_fn=lambda: 2.0 * cfg.n_active_params() * b,
+        note="one new token against a KV cache of seq_len",
+    )
+
+
+# ----------------------------------------------------------------- GNN cells
+def _gnn_batch_sds(shape: ShapeSpec, mesh: Mesh, n_classes: int):
+    chips = mesh_chips(mesh)
+    if shape.name == "molecule":
+        n = _pad_to(shape.n_graphs * shape.n_nodes, chips)
+        m = _pad_to(shape.n_graphs * shape.n_edges * 2, chips)
+    else:
+        n = _pad_to(shape.n_nodes, chips)
+        m = _pad_to(shape.n_edges, chips)
+    sds = {
+        "x": _sds((n, shape.d_feat), jnp.float32),
+        "src": _sds((m,), jnp.int32),
+        "dst": _sds((m,), jnp.int32),
+        "labels": _sds((n,), jnp.int32),
+        "train_mask": _sds((n,), jnp.bool_),
+        "log_deg_avg": _sds((), jnp.float32),
+    }
+    specs = {
+        "x": ("nodes", None), "src": ("edges",), "dst": ("edges",),
+        "labels": ("nodes",), "train_mask": ("nodes",), "log_deg_avg": (),
+    }
+    return sds, specs
+
+
+def _gnn_sampled_sds(cfg: GNNConfig, shape: ShapeSpec):
+    b = shape.batch_nodes
+    f1, f2 = shape.fanout
+    d = shape.d_feat
+    sds = {
+        "x_self": _sds((b, d), jnp.float32),
+        "x_nbr": _sds((b, f1, d), jnp.float32),
+        "x_nbr2": _sds((b, f1, f2, d), jnp.float32),
+        "labels": _sds((b,), jnp.int32),
+    }
+    specs = {
+        "x_self": ("batch", None), "x_nbr": ("batch", None, None),
+        "x_nbr2": ("batch", None, None, None), "labels": ("batch",),
+    }
+    return sds, specs
+
+
+def _gnn_sampled_subgraph_sds(shape: ShapeSpec, mesh: Mesh):
+    """Non-graphsage archs on minibatch_lg: block-diagonal sampled subgraph."""
+    b = shape.batch_nodes
+    f1, f2 = shape.fanout
+    chips = mesh_chips(mesh)
+    n = _pad_to(b * (1 + f1 + f1 * f2), chips)
+    m = _pad_to(b * f1 + b * f1 * f2, chips)
+    sds = {
+        "x": _sds((n, shape.d_feat), jnp.float32),
+        "src": _sds((m,), jnp.int32),
+        "dst": _sds((m,), jnp.int32),
+        "labels": _sds((n,), jnp.int32),
+        "train_mask": _sds((n,), jnp.bool_),
+        "log_deg_avg": _sds((), jnp.float32),
+    }
+    specs = {
+        "x": ("nodes", None), "src": ("edges",), "dst": ("edges",),
+        "labels": ("nodes",), "train_mask": ("nodes",), "log_deg_avg": (),
+    }
+    return sds, specs
+
+
+def _gnn_distributed_cell(arch: str, cfg: GNNConfig, shape: ShapeSpec,
+                          mesh: Mesh) -> Cell:
+    """Full-graph GNN over the engine's edge partition (§Perf optimized path):
+    shard_map + one bucketed all_to_all per aggregation sweep."""
+    from repro.models import gnn_distributed as gd
+    from repro.optim import adamw
+
+    n_classes = GNN_CLASSES[shape.name]
+    chips = mesh_chips(mesh)
+    axes = tuple(mesh.axis_names)
+    n = shape.n_nodes if shape.name != "molecule" else shape.n_graphs * shape.n_nodes
+    m = shape.n_edges if shape.name != "molecule" else shape.n_graphs * shape.n_edges * 2
+    shapes = gd.partitioned_batch_shapes(n, m, chips, shape.d_feat)
+    n_local = shapes["x"][0][1]
+    batch_sds = {k: _sds(*v) for k, v in shapes.items()}
+    spec_shard = tuple(axes)
+    batch_specs = {
+        "x": ("part_shard", None, None), "send_src_local": ("part_shard", None, None),
+        "recv_dst_local": ("part_shard", None), "labels": ("part_shard", None),
+        "train_mask": ("part_shard", None), "log_deg_avg": (),
+    }
+    rules = dict()
+    from repro.sharding import DEFAULT_RULES
+    rules.update(DEFAULT_RULES)
+    rules["part_shard"] = axes
+    loss_fn = gd.build_distributed_pna_loss(cfg, mesh, axes, n_local)
+    oc = AdamWConfig(weight_decay=0.0)
+
+    def init_fn(rng):
+        from repro.models import gnn as gnn_mod
+        params, specs = gnn_mod.init(rng, cfg, shape.d_feat, n_classes)
+        state = {"params": params, "opt": adamw.init_state(params, oc),
+                 "step": jnp.zeros((), jnp.int32)}
+        sspec = {"params": specs, "opt": adamw.state_specs(specs), "step": ()}
+        return state, sspec
+
+    state_sds, state_specs = abstract_init(init_fn, jax.random.key(0))
+
+    def step(state, batch):
+        (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state["params"], batch)
+        new_params, new_opt, om = adamw.update(
+            grads, state["opt"], state["params"], oc)
+        return ({"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+                {"loss": loss, **om})
+
+    state_sh = shardings_for(state_sds, state_specs, mesh, rules=rules)
+    batch_sh = shardings_for(batch_sds, batch_specs, mesh, rules=rules)
+    metrics_sds = jax.eval_shape(step, state_sds, batch_sds)[1]
+    metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_sds)
+    dh = cfg.d_hidden
+    flops = 2.0 * cfg.n_layers * (m * dh + n * dh * dh) * 3
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="train_step",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        model_flops_fn=lambda: flops,
+        note="edge-partition shard_map message passing",
+    )
+
+
+def _gnn_train_cell(arch: str, cfg: GNNConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    if (cfg.distributed and cfg.model == "pna"
+            and shape.name in ("full_graph_sm", "ogb_products")):
+        return _gnn_distributed_cell(arch, cfg, shape, mesh)
+    n_classes = GNN_CLASSES[shape.name]
+    tc = train_lib.TrainConfig(optimizer=AdamWConfig(weight_decay=0.0))
+    sampled = shape.name == "minibatch_lg" and cfg.model == "graphsage"
+    if sampled:
+        batch_sds, batch_specs = _gnn_sampled_sds(cfg, shape)
+    elif shape.name == "minibatch_lg":
+        batch_sds, batch_specs = _gnn_sampled_subgraph_sds(shape, mesh)
+    else:
+        batch_sds, batch_specs = _gnn_batch_sds(shape, mesh, n_classes)
+    state_sds, state_specs = abstract_init(
+        train_lib.init_state, jax.random.key(0), cfg, tc,
+        d_in=shape.d_feat, n_classes=n_classes,
+    )
+    state_sh = shardings_for(state_sds, state_specs, mesh)
+    batch_sh = shardings_for(batch_sds, batch_specs, mesh)
+    step = train_lib.build_train_step(cfg, tc)
+    metrics_sds = jax.eval_shape(step, state_sds, batch_sds)[1]
+    metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_sds)
+    # model flops: per edge, d_hidden MACs per layer (order of magnitude)
+    m = batch_sds["src"].shape[0] if "src" in batch_sds else (
+        shape.batch_nodes * (shape.fanout[0] + shape.fanout[0] * shape.fanout[1]))
+    nn = batch_sds["x"].shape[0] if "x" in batch_sds else shape.batch_nodes
+    dh = cfg.d_hidden
+    flops = 2.0 * cfg.n_layers * (m * dh + nn * dh * dh) * 3  # fwd+bwd
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="train_step",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        model_flops_fn=lambda: flops,
+    )
+
+
+# -------------------------------------------------------------- recsys cells
+def _recsys_train_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    k = 8
+    mb = shape.batch // k
+    tc = train_lib.TrainConfig(
+        optimizer=AdamWConfig(), microbatches=k, pre_microbatched=True)
+    state_sds, state_specs = abstract_init(train_lib.init_state, jax.random.key(0), cfg, tc)
+    batch_sds = {
+        "items": _sds((k, mb, cfg.seq_len), jnp.int32),
+        "labels": _sds((k, mb, cfg.seq_len), jnp.int32),
+        "mlm_mask": _sds((k, mb, cfg.seq_len), jnp.bool_),
+    }
+    batch_specs = {k2: (None, "batch", None) for k2 in batch_sds}
+    state_sh = shardings_for(state_sds, state_specs, mesh)
+    batch_sh = shardings_for(batch_sds, batch_specs, mesh)
+    step = train_lib.build_train_step(cfg, tc)
+    metrics_sds = jax.eval_shape(step, state_sds, batch_sds)[1]
+    metrics_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), metrics_sds)
+    # useful flops: encoder matmuls per token + the head of the *lowered*
+    # algorithm (full catalog or 1+N sampled candidates)
+    per_tok = cfg.n_blocks * 12 * cfg.embed_dim ** 2
+    v_eff = (1 + cfg.n_negatives) if cfg.n_negatives else (cfg.n_items + 2)
+    tokens = shape.batch * cfg.seq_len
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="train_step",
+        fn=step, args_sds=(state_sds, batch_sds),
+        in_shardings=(state_sh, batch_sh), out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,),
+        model_flops_fn=lambda: 6.0 * tokens * (per_tok + cfg.embed_dim * v_eff),
+    )
+
+
+def _recsys_serve_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    params_sds, pspecs = abstract_init(bert4rec.init, jax.random.key(0), cfg)
+    params_sh = shardings_for(params_sds, pspecs, mesh)
+    b = shape.batch
+
+    def serve(params, items):
+        scores = bert4rec.serve_scores(params, cfg, items)
+        vals, ids = jax.lax.top_k(scores, 100)
+        return {"scores": vals, "ids": ids}
+
+    items_sds = _sds((b, cfg.seq_len), jnp.int32)
+    items_sh = NamedSharding(mesh, resolve_spec(items_sds, ("batch", None), mesh))
+    topk_sds = _sds((b, 100), jnp.float32)
+    topk_sh = NamedSharding(mesh, resolve_spec(topk_sds, ("batch", None), mesh))
+    out_sh = {"scores": topk_sh, "ids": topk_sh}
+    per_tok = cfg.n_blocks * 12 * cfg.embed_dim ** 2
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="serve_step",
+        fn=serve, args_sds=(params_sds, items_sds),
+        in_shardings=(params_sh, items_sh), out_shardings=out_sh,
+        model_flops_fn=lambda: 2.0 * b * (
+            cfg.seq_len * per_tok + cfg.embed_dim * (cfg.n_items + 2)),
+    )
+
+
+def _recsys_retrieval_cell(arch: str, cfg: RecsysConfig, shape: ShapeSpec, mesh: Mesh) -> Cell:
+    params_sds, pspecs = abstract_init(bert4rec.init, jax.random.key(0), cfg)
+    params_sh = shardings_for(params_sds, pspecs, mesh)
+    b, c = shape.batch, shape.n_candidates
+
+    def retrieve(params, items, cands):
+        return bert4rec.retrieval_scores(params, cfg, items, cands)
+
+    items_sds = _sds((b, cfg.seq_len), jnp.int32)
+    cands_sds = _sds((c,), jnp.int32)
+    items_sh = NamedSharding(mesh, resolve_spec(items_sds, ("batch", None), mesh))
+    cands_sh = NamedSharding(mesh, resolve_spec(cands_sds, ("candidates",), mesh))
+    out_sds = _sds((b, c), jnp.float32)
+    out_sh = NamedSharding(mesh, resolve_spec(out_sds, (None, "candidates"), mesh))
+    per_tok = cfg.n_blocks * 12 * cfg.embed_dim ** 2
+    return Cell(
+        mesh=mesh, arch=arch, shape=shape.name, step_kind="retrieval",
+        fn=retrieve, args_sds=(params_sds, items_sds, cands_sds),
+        in_shardings=(params_sh, items_sh, cands_sh), out_shardings=out_sh,
+        model_flops_fn=lambda: 2.0 * (
+            b * cfg.seq_len * per_tok + b * c * cfg.embed_dim),
+    )
+
+
+# ------------------------------------------------------------------ dispatch
+def build_cell(arch: str, shape_name: str, mesh: Mesh,
+               cfg_overrides: Optional[Dict] = None) -> Optional[Cell]:
+    """Returns None when the cell is marked skipped for this arch.
+
+    The active mesh is installed for the whole build: jax's trace cache is
+    shared between the eval_shape calls here and the later jit .lower(), so
+    the FIRST trace must already carry the constrain() annotations. (Each
+    builder creates a fresh step function, so traces never leak between
+    meshes.)
+
+    cfg_overrides (perf iterations): dataclasses.replace fields on the arch
+    config, e.g. {"moe_groups": 32}."""
+    from repro.sharding import active_mesh
+    with active_mesh(mesh):
+        return _build_cell(arch, shape_name, mesh, cfg_overrides)
+
+
+def _build_cell(arch: str, shape_name: str, mesh: Mesh,
+                cfg_overrides: Optional[Dict] = None) -> Optional[Cell]:
+    mod = get_arch(arch)
+    cfg = mod.CONFIG
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = mod.SHAPES[shape_name]
+    if shape.skip:
+        return None
+    if isinstance(cfg, LMConfig):
+        if shape.step == "train":
+            return _lm_train_cell(arch, cfg, shape, mesh)
+        if shape.step == "prefill":
+            return _lm_prefill_cell(arch, cfg, shape, mesh)
+        if shape.step == "decode":
+            return _lm_decode_cell(arch, cfg, shape, mesh)
+    if isinstance(cfg, GNNConfig):
+        return _gnn_train_cell(arch, cfg, shape, mesh)
+    if isinstance(cfg, RecsysConfig):
+        if shape.step == "train":
+            return _recsys_train_cell(arch, cfg, shape, mesh)
+        if shape.step == "serve":
+            return _recsys_serve_cell(arch, cfg, shape, mesh)
+        if shape.step == "retrieval":
+            return _recsys_retrieval_cell(arch, cfg, shape, mesh)
+    raise ValueError((arch, shape_name))

@@ -1,0 +1,146 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable (e)).
+
+For every (architecture x input shape x mesh) cell:
+  jax.jit(step, in_shardings, out_shardings).lower(**ShapeDtypeStructs)
+      .compile()
+then records memory_analysis(), cost_analysis(), and the collective schedule
+parsed from the compiled SPMD HLO, and derives the three roofline terms.
+
+Meshes: 16x16 (data, model) single pod — the roofline table — and
+2x16x16 (pod, data, model) — proves the pod axis shards. Results stream to
+experiments/dryrun/<mesh>/<arch>__<shape>.json as they complete (the full
+sweep is ~75 compiles of production-size programs).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch A] [--shape S]
+      [--mesh single|multi|both] [--out DIR]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.cells import build_cell
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.roofline import Roofline
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str, out_dir: str):
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh)
+    if cell is None:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": get_arch(arch).SHAPES[shape_name].skip}
+        _dump(rec, out_dir, mesh_name, arch, shape_name)
+        return rec
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    # loop-aware cost model (XLA's cost_analysis counts while bodies once —
+    # see hlo_cost.py; the raw XLA numbers are kept for cross-checking)
+    cost = hlo_analyze(hlo)
+    rl = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=mesh_chips(mesh),
+        hlo_flops_per_device=cost["flops_per_device"],
+        hlo_bytes_per_device=cost["bytes_per_device"],
+        collective_bytes_per_device=cost["collective_bytes_per_device"],
+        model_flops=cell.model_flops_fn() if cell.model_flops_fn else None,
+    )
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "step_kind": cell.step_kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_per_device_gib": round(
+                (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                 + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        },
+        "collectives": cost["collectives"],
+        "xla_cost_analysis_raw": {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+            "note": "XLA counts while bodies once; roofline uses hlo_cost.py",
+        },
+        "roofline": rl.to_dict(),
+        "note": cell.note,
+    }
+    _dump(rec, out_dir, mesh_name, arch, shape_name)
+    return rec
+
+
+def _dump(rec, out_dir, mesh_name, arch, shape_name):
+    d = os.path.join(out_dir, mesh_name)
+    os.makedirs(d, exist_ok=True)
+    with open(os.path.join(d, f"{arch}__{shape_name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch id (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape name (default: all)")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run requires 512 forced host devices"
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    failures = []
+    for mesh_name, mesh in meshes:
+        for arch in archs:
+            shapes = [args.shape] if args.shape else list(get_arch(arch).SHAPES)
+            for shape_name in shapes:
+                tag = f"{mesh_name} {arch} x {shape_name}"
+                path = os.path.join(args.out, mesh_name, f"{arch}__{shape_name}.json")
+                if args.skip_existing and os.path.exists(path):
+                    print(f"[skip-existing] {tag}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape_name, mesh, mesh_name, args.out)
+                except Exception as e:  # a dry-run failure is a bug in the system
+                    failures.append((tag, repr(e)))
+                    print(f"[FAIL] {tag}: {e}")
+                    traceback.print_exc()
+                    continue
+                if rec["status"] == "skipped":
+                    print(f"[skipped] {tag}: {rec['reason']}")
+                else:
+                    r = rec["roofline"]
+                    print(
+                        f"[ok] {tag}: {rec['step_kind']} "
+                        f"compile={rec['compile_s']}s "
+                        f"mem/dev={rec['memory']['peak_per_device_gib']}GiB "
+                        f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                        f"coll={r['collective_s']:.3e}s -> {r['bottleneck']}"
+                    )
+    print(f"\n{len(failures)} failures")
+    for tag, err in failures:
+        print(f"  {tag}: {err}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Collective-traffic extraction from compiled (SPMD-partitioned) HLO text.
+
+`compiled.cost_analysis()` has no collective accounting, so the roofline's
+third term is derived here: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction is located in the HLO module and
+its *operand* sizes summed (per the assignment). HLO operands are %name
+references, so a first pass builds a name -> bytes map from instruction
+definitions. All shapes in compiled SPMD HLO are per-device (partitioned)
+shapes, so the sum is bytes-per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 1, "u4": 1, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    """Total bytes of every shape literal in `text` (handles tuples)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        size = 1
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        total += size * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device operand bytes of each collective kind (+ 'total').
+
+    -start/-done async pairs are counted once (at -start)."""
+    defs: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.groups()
+        # bytes of the defined value = shapes before the op name (output type)
+        paren = rhs.find("(")
+        head = rhs[:paren] if paren > 0 else rhs
+        defs[name] = _shape_bytes(head)
+
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    for line in hlo_text.splitlines():
+        cm = _COLL_RE.search(line)
+        if cm is None or "-done(" in line:
+            continue
+        kind = cm.group(1)
+        # operands: %refs inside the call parens
+        call = line[cm.end():]
+        call = call.split(", channel_id")[0].split(", replica_groups")[0]
+        nbytes = 0
+        for ref in _OPERAND_RE.findall(call):
+            nbytes += defs.get(ref, 0)
+        if nbytes == 0:
+            # fall back to the output size (operand defined out of scope)
+            m = _DEF_RE.match(line)
+            if m:
+                paren = m.group(2).find("(")
+                nbytes = _shape_bytes(m.group(2)[:paren])
+        out[kind] += float(nbytes)
+        counts[kind] += 1
+    out["total"] = float(sum(v for k, v in out.items() if k != "total"))
+    for k, c in counts.items():
+        out[f"n_{k}"] = float(c)
+    return dict(out)

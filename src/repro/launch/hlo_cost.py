@@ -1,0 +1,343 @@
+"""Loop-aware HLO cost model (flops / bytes / collective bytes).
+
+XLA's `compiled.cost_analysis()` counts each `while` body ONCE regardless of
+trip count (verified empirically — a scan of 8 matmuls reports 1 matmul of
+flops), which silently undercounts every scanned-layer model by ~n_layers x.
+This walker parses the compiled (SPMD-partitioned, per-device) HLO text and
+computes:
+
+  flops            dot ops: 2 * out_elems * contracted_size; elementwise ~1/elem
+  bytes            per instruction: operand bytes + output bytes (fusion
+                   internals excluded — fused intermediates stay in registers,
+                   matching XLA's model)
+  collective bytes operand bytes of all-gather / all-reduce / reduce-scatter /
+                   all-to-all / collective-permute, BY KIND
+
+multiplying every `while` body/condition by its `known_trip_count` from
+backend_config (fallback: largest integer constant in the condition). All
+shapes in compiled SPMD HLO are per-device, so all numbers are per-device.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "token": 0, "opaque": 0, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPERAND_REF_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+_COLLECTIVE_KINDS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "opt-barrier", "partition-id", "replica-id",
+}
+
+
+def _shape_list(text: str) -> List[Tuple[str, List[int]]]:
+    return [(d, [int(x) for x in dims.split(",")] if dims else [])
+            for d, dims in _SHAPE_RE.findall(text)]
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dtype, dims in _shape_list(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _elems_of_first(text: str) -> int:
+    shapes = [s for s in _shape_list(text) if s[0] in _DTYPE_BYTES]
+    if not shapes:
+        return 0
+    n = 1
+    for d in shapes[0][1]:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_text: str        # output type string
+    attrs: str           # everything after the operand parens
+    operands: List[str]
+    raw_operands: str = ""  # literal operand text (parameter indices etc.)
+
+    @property
+    def out_bytes(self) -> int:
+        return _bytes_of(self.out_text)
+
+    @property
+    def out_elems(self) -> int:
+        return _elems_of_first(self.out_text)
+
+
+def _parse_instruction(line: str) -> Optional[Instr]:
+    m = _INSTR_RE.match(line)
+    if not m:
+        return None
+    name, rhs = m.groups()
+    # type: either "(tuple...)" or a single token
+    if rhs.startswith("("):
+        depth, i = 0, 0
+        for i, ch in enumerate(rhs):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        out_text = rhs[: i + 1]
+        rest = rhs[i + 1:].strip()
+    else:
+        sp = rhs.find(" ")
+        out_text = rhs[:sp]
+        rest = rhs[sp + 1:].strip()
+    om = re.match(r"([\w\-]+)\(", rest)
+    if not om:
+        return None
+    op = om.group(1)
+    # operand list = up to the matching close paren
+    depth, j = 0, om.end() - 1
+    for j in range(om.end() - 1, len(rest)):
+        if rest[j] == "(":
+            depth += 1
+        elif rest[j] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    operand_text = rest[om.end(): j]
+    attrs = rest[j + 1:]
+    operands = _OPERAND_REF_RE.findall(operand_text)
+    return Instr(name=name, op=op, out_text=out_text, attrs=attrs,
+                 operands=operands, raw_operands=operand_text)
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def add(self, other: "Cost", times: float = 1.0):
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v * times
+
+    @property
+    def coll_total(self) -> float:
+        return sum(v for k, v in self.coll.items() if not k.startswith("n_"))
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        for line in text.splitlines():
+            h = _HDR_RE.match(line)
+            if h:
+                cur = h.group(2)
+                self.computations[cur] = []
+                if h.group(1):
+                    self.entry = cur
+                continue
+            if cur is None:
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            ins = _parse_instruction(line)
+            if ins is not None:
+                self.computations[cur].append(ins)
+
+    # ------------------------------------------------------------- dot flops
+    def _dot_flops(self, ins: Instr, defs: Dict[str, Instr]) -> float:
+        m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs)
+        cdims = [int(x) for x in m.group(1).split(",")] if (m and m.group(1)) else []
+        lhs = defs.get(ins.operands[0]) if ins.operands else None
+        contract = 1
+        if lhs is not None:
+            shapes = [s for s in _shape_list(lhs.out_text) if s[0] in _DTYPE_BYTES]
+            if shapes:
+                dims = shapes[0][1]
+                for c in cdims:
+                    if c < len(dims):
+                        contract *= dims[c]
+        return 2.0 * ins.out_elems * max(contract, 1)
+
+    def _trip_count(self, ins: Instr) -> int:
+        m = _TRIP_RE.search(ins.attrs)
+        if m:
+            return int(m.group(1))
+        cm = _COND_RE.search(ins.attrs)
+        if cm and cm.group(1) in self.computations:
+            consts = []
+            for ci in self.computations[cm.group(1)]:
+                consts += [int(x) for x in _CONST_INT_RE.findall(
+                    ci.op + "(" + ins.attrs + ")") if int(x) > 0]
+                consts += [int(x) for x in _CONST_INT_RE.findall(ci.attrs)]
+                if ci.op == "constant":
+                    mm = re.search(r"constant\((\d+)\)", ci.out_text + " " + ci.attrs)
+                    if mm:
+                        consts.append(int(mm.group(1)))
+            if consts:
+                return max(consts)
+        return 1
+
+    _SLICE_OPS = {"dynamic-slice", "slice", "gather"}
+
+    def _fusion_operand_bytes(self, called: str, operand_bytes: List[int]) -> float:
+        """Bytes actually read from each fusion operand.
+
+        A fusion that only *slices* a parameter (dynamic-slice / slice /
+        gather applied directly to it) reads the slice, not the whole array —
+        charging full operand bytes would overcount per-bucket gathers by the
+        number of buckets. For such parameters we charge the summed slice
+        outputs (capped at the full size)."""
+        instrs = self.computations.get(called)
+        if instrs is None:
+            return float(sum(operand_bytes))
+        uses: Dict[str, List[Instr]] = {}
+        for ins in instrs:
+            for o in ins.operands:
+                uses.setdefault(o, []).append(ins)
+        total = 0.0
+        seen_idx = set()
+        for p in instrs:
+            if p.op != "parameter":
+                continue
+            m = re.match(r"\s*(\d+)", p.raw_operands)
+            idx = int(m.group(1)) if m else -1
+            if not (0 <= idx < len(operand_bytes)):
+                continue
+            seen_idx.add(idx)
+            full = operand_bytes[idx]
+            pu = uses.get(p.name, [])
+            if pu and all(u.op in self._SLICE_OPS and u.operands
+                          and u.operands[0] == p.name for u in pu):
+                sliced = sum(u.out_bytes for u in pu)
+                total += min(sliced, full)
+            else:
+                total += full
+        # operands without a parsed parameter — charge fully
+        total += sum(b for i, b in enumerate(operand_bytes) if i not in seen_idx)
+        return total
+
+    def cost(self, comp: Optional[str] = None) -> Cost:
+        comp = comp or self.entry
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        self._memo[comp] = total  # recursion guard (shouldn't recurse)
+        instrs = self.computations.get(comp, [])
+        defs = {i.name: i for i in instrs}
+        for ins in instrs:
+            op = ins.op
+            site_bytes = 0.0
+            if op not in _SKIP_BYTES_OPS:
+                operand_bytes = [defs[o].out_bytes for o in ins.operands if o in defs]
+                if op == "fusion":
+                    cm0 = _CALLS_RE.search(ins.attrs)
+                    ob = self._fusion_operand_bytes(
+                        cm0.group(1) if cm0 else "", operand_bytes)
+                else:
+                    ob = float(sum(operand_bytes))
+                site_bytes = ob + float(ins.out_bytes)
+            base_kind = re.sub(r"-(start|done)$", "", op)
+            if op == "while":
+                trip = self._trip_count(ins)
+                bm = _BODY_RE.search(ins.attrs)
+                cm = _COND_RE.search(ins.attrs)
+                if bm and bm.group(1) in self.computations:
+                    total.add(self.cost(bm.group(1)), times=trip)
+                if cm and cm.group(1) in self.computations:
+                    total.add(self.cost(cm.group(1)), times=trip)
+                total.bytes += site_bytes
+            elif op in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm and cm.group(1) in self.computations:
+                    inner = self.cost(cm.group(1))
+                    total.flops += inner.flops
+                    for k, v in inner.coll.items():
+                        total.coll[k] = total.coll.get(k, 0.0) + v
+                    if op == "call":
+                        total.bytes += inner.bytes
+                total.bytes += site_bytes
+            elif op == "conditional":
+                bm = _BRANCHES_RE.search(ins.attrs)
+                if bm:
+                    branches = _OPERAND_REF_RE.findall(bm.group(1)) or [
+                        b.strip().lstrip("%") for b in bm.group(1).split(",")]
+                    costs = [self.cost(b) for b in branches if b in self.computations]
+                    if costs:
+                        worst = max(costs, key=lambda c: c.flops + c.bytes)
+                        total.add(worst)
+                total.bytes += site_bytes
+            elif base_kind in _COLLECTIVE_KINDS:
+                if not op.endswith("-done"):
+                    opb = float(sum(
+                        defs[o].out_bytes for o in ins.operands if o in defs))
+                    if opb == 0.0:
+                        opb = float(ins.out_bytes)
+                    total.coll[base_kind] = total.coll.get(base_kind, 0.0) + opb
+                    total.coll[f"n_{base_kind}"] = total.coll.get(f"n_{base_kind}", 0.0) + 1
+                total.bytes += site_bytes
+            elif op == "dot":
+                total.flops += self._dot_flops(ins, defs)
+                total.bytes += site_bytes
+            elif op == "convolution":
+                # rough: 2 * out_elems * kernel_elems (no convs in this repo)
+                total.flops += 2.0 * ins.out_elems
+                total.bytes += site_bytes
+            elif op in ("custom-call",):
+                total.bytes += site_bytes
+            else:
+                total.flops += float(ins.out_elems)
+                total.bytes += site_bytes
+        self._memo[comp] = total
+        return total
+
+
+def analyze(hlo_text: str) -> Dict:
+    """Loop-aware per-device cost summary of a compiled HLO module."""
+    model = HloCostModel(hlo_text)
+    c = model.cost()
+    out = {
+        "flops_per_device": c.flops,
+        "bytes_per_device": c.bytes,
+        "collective_bytes_per_device": c.coll_total,
+        "collectives": dict(c.coll),
+    }
+    return out

@@ -1,0 +1,26 @@
+"""Production meshes. Functions, not module constants — importing this module
+never touches jax device state (required by smoke tests that must see 1 CPU
+device)."""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 (data, model) single pod; 2x16x16 (pod, data, model) multi-pod.
+
+    One pod = 256 chips (TPU v5e-256); the pod axis crosses DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> Mesh:
+    """Whatever this host has — used by examples and tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def mesh_chips(mesh: Mesh) -> int:
+    return mesh.devices.size

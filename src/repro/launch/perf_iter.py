@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness (§Perf hypothesis -> change -> measure loop).
+
+Lowers one cell with config/knob overrides and reports the three roofline
+terms + the collective breakdown, against the recorded baseline.
+
+  PYTHONPATH=src python -m repro.launch.perf_iter --arch deepseek-v3-671b \
+      --shape train_4k --set moe_groups=32 --set moe_gather_weights=1 \
+      --tag iter1
+"""
+import argparse
+import json
+
+import jax
+
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.cells import build_cell
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.roofline import Roofline
+
+
+def parse_val(v: str):
+    if v.lower() in ("true", "false"):
+        return v.lower() == "true"
+    try:
+        return int(v)
+    except ValueError:
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg field override key=value")
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/perf")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = parse_val(v)
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    mesh_name = "multi_pod_2x16x16" if args.multi_pod else "single_pod_16x16"
+    cell = build_cell(args.arch, args.shape, mesh, cfg_overrides=overrides)
+    lowered = cell.lower()
+    compiled = lowered.compile()
+    ma = compiled.memory_analysis()
+    cost = hlo_analyze(compiled.as_text())
+    rl = Roofline(
+        arch=args.arch, shape=args.shape, mesh=mesh_name, chips=mesh_chips(mesh),
+        hlo_flops_per_device=cost["flops_per_device"],
+        hlo_bytes_per_device=cost["bytes_per_device"],
+        collective_bytes_per_device=cost["collective_bytes_per_device"],
+        model_flops=cell.model_flops_fn() if cell.model_flops_fn else None,
+    )
+    rec = {
+        "tag": args.tag, "overrides": overrides,
+        "memory_peak_per_device_gib": round(
+            (ma.argument_size_in_bytes + ma.output_size_in_bytes
+             + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
+        "collectives": cost["collectives"],
+        "roofline": rl.to_dict(),
+    }
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+    # diff vs the baseline dry-run record
+    base_path = os.path.join("experiments/dryrun", mesh_name,
+                             f"{args.arch}__{args.shape}.json")
+    r = rec["roofline"]
+    print(f"{args.tag}: compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+          f"coll={r['collective_s']:.3e}s -> {r['bottleneck']} "
+          f"(mem/dev {rec['memory_peak_per_device_gib']} GiB, "
+          f"roofline_frac={r['roofline_fraction']})")
+    if os.path.exists(base_path):
+        b = json.load(open(base_path))["roofline"]
+        for term in ("compute_s", "memory_s", "collective_s"):
+            if b[term] > 0:
+                print(f"  {term}: {b[term]:.3e} -> {r[term]:.3e} "
+                      f"({b[term]/max(r[term],1e-30):.2f}x better)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+(`cost_analysis()` on this JAX version reports per-device numbers for SPMD
+modules — verified empirically in launch/dryrun.py's self-check — so the
+per-chip division of the assignment formulas is already applied.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12      # bf16 per chip (TPU v5e)
+HBM_BW = 819e9           # bytes/s per chip
+LINK_BW = 50e9           # bytes/s per ICI link
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops_per_device: float
+    hlo_bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: Optional[float]  # 6*N*D / 2*N*D analytic, global
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        """MODEL_FLOPS / HLO_FLOPs (global) — remat/redundancy waste detector."""
+        if not self.model_flops:
+            return None
+        total = self.hlo_flops_per_device * self.chips
+        return self.model_flops / total if total else None
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of the chip's peak the dominant-term time would realize on
+        useful model FLOPs — the headline §Perf score."""
+        if not self.model_flops:
+            return None
+        t = max(self.compute_s, self.memory_s, self.collective_s)
+        if t <= 0:
+            return None
+        return (self.model_flops / self.chips) / (t * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops_per_device": self.hlo_flops_per_device,
+            "hlo_bytes_per_device": self.hlo_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,7 @@
+"""Model zoo: the assigned architectures as composable JAX modules.
+
+  transformer — GQA/MLA attention, dense/MoE MLP, MTP (all 5 LM archs)
+  gnn         — PNA / GraphSAGE / GIN / GAT (segment-op message passing)
+  bert4rec    — bidirectional sequential recommender
+"""
+from repro.models import common, transformer, gnn, bert4rec  # noqa: F401

@@ -1,0 +1,130 @@
+"""Shared model building blocks (pure functions over param pytrees).
+
+Every `init_*` returns (params, specs) where `specs` mirrors the param tree
+with tuples of logical sharding axes (see repro/sharding.py). Models are
+plain functions — no framework dependency — so pjit sees the whole program.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    # float(): a np.float64 scalar is not weak-typed and would promote bf16
+    # params to f32; a python float keeps the param dtype.
+    scale = float(scale) if scale is not None else float(1.0 / np.sqrt(d_in))
+    return jax.random.normal(rng, (d_in, d_out), dtype) * scale
+
+
+def rms_norm(x: jnp.ndarray, gamma: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma
+
+
+def layer_norm(x, gamma, beta, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * gamma + beta
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """x: [..., S, D] with D even; positions: int[..., S] or int[S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                      # [D/2]
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def causal_mask(s: int) -> jnp.ndarray:
+    return jnp.tril(jnp.ones((s, s), dtype=bool))
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean token-level CE in fp32. logits [..., V], labels int[...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def blockwise_cross_entropy(h: jnp.ndarray, head: jnp.ndarray,
+                            labels: jnp.ndarray,
+                            mask: Optional[jnp.ndarray] = None,
+                            block: int = 8192) -> jnp.ndarray:
+    """Fused softmax-CE streamed over vocab blocks (perf path, §Perf).
+
+    Never materializes the [T, V] logits in fp32: a lax.scan over V/block
+    chunks carries a running (max, denom, gold-logit) per token — the same
+    online-softmax recurrence as flash attention, applied to the loss. h can
+    stay bf16; each chunk matmul accumulates in fp32.
+
+    h [..., D], head [D, V], labels int[...]. Returns mean token NLL."""
+    d, v = head.shape
+    t_shape = labels.shape
+    ht = h.reshape(-1, d)
+    lab = labels.reshape(-1)
+    tn = ht.shape[0]
+    nb = -(-v // block)
+    pad = nb * block - v
+    if pad:
+        head = jnp.pad(head, ((0, 0), (0, pad)))
+    head_b = head.reshape(d, nb, block).transpose(1, 0, 2)  # [nb, D, block]
+
+    def body(carry, xs):
+        m, l, gold = carry
+        bi, hb = xs
+        logits = jnp.einsum("td,db->tb", ht, hb,
+                            preferred_element_type=jnp.float32)
+        off = bi * block
+        col = jax.lax.broadcasted_iota(jnp.int32, (tn, block), 1) + off
+        live = col < v
+        logits = jnp.where(live, logits, -1e30)
+        m_cur = jnp.max(logits, axis=1)
+        m_new = jnp.maximum(m, m_cur)
+        l_new = l * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(logits - m_new[:, None]), axis=1)
+        in_blk = (lab >= off) & (lab < off + block)
+        idx = jnp.clip(lab - off, 0, block - 1)
+        gold_new = gold + jnp.where(
+            in_blk, jnp.take_along_axis(logits, idx[:, None], axis=1)[:, 0], 0.0)
+        return (m_new, l_new, gold_new), None
+
+    init = (jnp.full((tn,), -1e30, jnp.float32), jnp.zeros((tn,), jnp.float32),
+            jnp.zeros((tn,), jnp.float32))
+    (m, l, gold), _ = jax.lax.scan(body, init, (jnp.arange(nb), head_b))
+    nll = (m + jnp.log(jnp.maximum(l, 1e-30))) - gold
+    nll = nll.reshape(t_shape)
+    if mask is not None:
+        mk = mask.astype(jnp.float32)
+        return jnp.sum(nll * mk) / jnp.maximum(jnp.sum(mk), 1.0)
+    return jnp.mean(nll)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down

@@ -1,0 +1,651 @@
+"""Decoder-only transformer family covering all five assigned LM archs.
+
+Features (config-selected):
+  - GQA attention with RoPE, optional QKV bias (qwen2), qk-norm (qwen3),
+    sliding window (starcoder2), LayerNorm or RMSNorm
+  - MLA attention (deepseek v2/v3): low-rank q (optional) and kv compression,
+    decoupled rope dims; decode uses the *absorbed* formulation over the
+    latent cache (the MLA memory win — cache is [S, kv_lora + rope], not
+    per-head)
+  - dense MLP (gelu / swiglu) or MoE with shared + routed top-k experts,
+    sort-based dispatch with static capacity, leading dense layers
+  - MTP (deepseek-v3): one extra transformer block predicting token t+2
+  - layers stacked for lax.scan (compile time O(1) in depth); params carry a
+    parallel tree of logical sharding axes
+
+Pure functions: init(rng, cfg) -> (params, specs); forward / loss_fn /
+decode_step consume the param pytree directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig
+from repro.models import common
+from repro.sharding import constrain
+from repro.kernels import ops as kops
+
+
+def _dt(cfg: LMConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------- init
+def _norm_init(cfg, d):
+    if cfg.norm == "layernorm":
+        return {"g": jnp.ones((d,), _dt(cfg)), "b": jnp.zeros((d,), _dt(cfg))}
+    return {"g": jnp.ones((d,), _dt(cfg))}
+
+
+def _norm_spec(cfg):
+    if cfg.norm == "layernorm":
+        return {"g": (None,), "b": (None,)}
+    return {"g": (None,)}
+
+
+def _apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        return common.layer_norm(x, p["g"], p["b"], cfg.norm_eps)
+    return common.rms_norm(x, p["g"], cfg.norm_eps)
+
+
+def _attn_init(rng, cfg: LMConfig):
+    d, hd = cfg.d_model, cfg.hd
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 8)
+    if cfg.attention == "mla":
+        qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+        p: Dict[str, Any] = {}
+        s: Dict[str, Any] = {}
+        if cfg.q_lora_rank:
+            p["wq_a"] = common.dense_init(ks[0], d, cfg.q_lora_rank, dtype=dt)
+            p["q_a_norm"] = jnp.ones((cfg.q_lora_rank,), dt)
+            p["wq_b"] = common.dense_init(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_dim, dtype=dt)
+            s.update({"wq_a": ("embed", None), "q_a_norm": (None,),
+                      "wq_b": (None, "heads")})
+        else:
+            p["wq"] = common.dense_init(ks[0], d, cfg.n_heads * qk_dim, dtype=dt)
+            s["wq"] = ("embed", "heads")
+        p["wkv_a"] = common.dense_init(ks[2], d, cfg.kv_lora_rank + cfg.qk_rope_dim, dtype=dt)
+        p["kv_a_norm"] = jnp.ones((cfg.kv_lora_rank,), dt)
+        p["wkv_b"] = common.dense_init(
+            ks[3], cfg.kv_lora_rank, cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim), dtype=dt)
+        p["wo"] = common.dense_init(ks[4], cfg.n_heads * cfg.v_head_dim, d, dtype=dt)
+        s.update({
+            "wkv_a": ("embed", None), "kv_a_norm": (None,),
+            "wkv_b": (None, "heads"), "wo": ("heads", "embed"),
+        })
+        return p, s
+    p = {
+        "wq": common.dense_init(ks[0], d, cfg.n_heads * hd, dtype=dt),
+        "wk": common.dense_init(ks[1], d, cfg.n_kv_heads * hd, dtype=dt),
+        "wv": common.dense_init(ks[2], d, cfg.n_kv_heads * hd, dtype=dt),
+        "wo": common.dense_init(ks[3], cfg.n_heads * hd, d, dtype=dt),
+    }
+    s = {"wq": ("embed", "heads"), "wk": ("embed", "kv_heads"),
+         "wv": ("embed", "kv_heads"), "wo": ("heads", "embed")}
+    if cfg.qkv_bias:
+        p.update({"bq": jnp.zeros((cfg.n_heads * hd,), dt),
+                  "bk": jnp.zeros((cfg.n_kv_heads * hd,), dt),
+                  "bv": jnp.zeros((cfg.n_kv_heads * hd,), dt)})
+        s.update({"bq": ("heads",), "bk": ("kv_heads",), "bv": ("kv_heads",)})
+    if cfg.qk_norm:
+        p.update({"q_norm": jnp.ones((hd,), dt), "k_norm": jnp.ones((hd,), dt)})
+        s.update({"q_norm": (None,), "k_norm": (None,)})
+    return p, s
+
+
+def _mlp_init(rng, cfg: LMConfig, d_ff: int):
+    d = cfg.d_model
+    dt = _dt(cfg)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    if cfg.mlp == "gelu":
+        p = {"w_in": common.dense_init(k1, d, d_ff, dtype=dt),
+             "b_in": jnp.zeros((d_ff,), dt),
+             "w_out": common.dense_init(k2, d_ff, d, dtype=dt),
+             "b_out": jnp.zeros((d,), dt)}
+        s = {"w_in": ("embed", "ff"), "b_in": ("ff",),
+             "w_out": ("ff", "embed"), "b_out": (None,)}
+    else:
+        p = {"w_gate": common.dense_init(k1, d, d_ff, dtype=dt),
+             "w_up": common.dense_init(k2, d, d_ff, dtype=dt),
+             "w_down": common.dense_init(k3, d_ff, d, dtype=dt)}
+        s = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+             "w_down": ("ff", "embed")}
+    return p, s
+
+
+def _moe_init(rng, cfg: LMConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_routed
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 5)
+    p = {
+        "router": common.dense_init(ks[0], d, e, dtype=jnp.float32),
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dt) / float(np.sqrt(d)),
+        "w_up": jax.random.normal(ks[2], (e, d, f), dt) / float(np.sqrt(d)),
+        "w_down": jax.random.normal(ks[3], (e, f, d), dt) / float(np.sqrt(f)),
+    }
+    s = {
+        "router": ("embed", None),
+        "w_gate": ("expert", "expert_embed", None),
+        "w_up": ("expert", "expert_embed", None),
+        "w_down": ("expert", None, "expert_embed"),
+    }
+    if cfg.n_shared:
+        sp, ss = _mlp_init(ks[4], cfg, cfg.n_shared * f)
+        p["shared"], s["shared"] = sp, ss
+    return p, s
+
+
+def _layer_init(rng, cfg: LMConfig, moe: bool):
+    k1, k2 = jax.random.split(rng)
+    attn_p, attn_s = _attn_init(k1, cfg)
+    if moe:
+        mlp_p, mlp_s = _moe_init(k2, cfg)
+    else:
+        d_ff = (cfg.dense_d_ff or cfg.d_ff) if cfg.moe else cfg.d_ff
+        mlp_p, mlp_s = _mlp_init(k2, cfg, d_ff)
+    p = {"ln1": _norm_init(cfg, cfg.d_model), "attn": attn_p,
+         "ln2": _norm_init(cfg, cfg.d_model), "mlp": mlp_p}
+    s = {"ln1": _norm_spec(cfg), "attn": attn_s,
+         "ln2": _norm_spec(cfg), "mlp": mlp_s}
+    return p, s
+
+
+def _stack(rng, cfg, n, moe):
+    """n layers with stacked (scan-ready) params."""
+    keys = jax.random.split(rng, max(n, 1))
+    layers = [_layer_init(keys[i], cfg, moe) for i in range(n)]
+    p = jax.tree.map(lambda *xs: jnp.stack(xs), *[l[0] for l in layers])
+    s = jax.tree.map(
+        lambda spec: (None,) + spec,
+        layers[0][1],
+        is_leaf=lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x),
+    )
+    return p, s
+
+
+def init(rng, cfg: LMConfig):
+    dt = _dt(cfg)
+    ks = jax.random.split(rng, 6)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), dt) * 0.02,
+        "final_norm": _norm_init(cfg, cfg.d_model),
+    }
+    specs: Dict[str, Any] = {
+        "embed": ("vocab", "embed"),
+        "final_norm": _norm_spec(cfg),
+    }
+    n_dense = cfg.first_dense_layers if cfg.moe else cfg.n_layers
+    n_moe = cfg.n_layers - n_dense if cfg.moe else 0
+    if n_dense:
+        params["dense_layers"], specs["dense_layers"] = _stack(ks[1], cfg, n_dense, moe=False)
+    if n_moe:
+        params["moe_layers"], specs["moe_layers"] = _stack(ks[2], cfg, n_moe, moe=True)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = common.dense_init(ks[3], cfg.d_model, cfg.vocab, dtype=dt)
+        specs["lm_head"] = ("embed", "vocab")
+    if cfg.mtp:
+        mtp_layer_p, mtp_layer_s = _layer_init(ks[4], cfg, moe=False)
+        params["mtp"] = {
+            "proj": common.dense_init(ks[5], 2 * cfg.d_model, cfg.d_model, dtype=dt),
+            "norm_h": _norm_init(cfg, cfg.d_model),
+            "norm_e": _norm_init(cfg, cfg.d_model),
+            "layer": mtp_layer_p,
+        }
+        specs["mtp"] = {
+            "proj": ("embed", None), "norm_h": _norm_spec(cfg),
+            "norm_e": _norm_spec(cfg), "layer": mtp_layer_s,
+        }
+    return params, specs
+
+
+# ------------------------------------------------------------------ attention
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)  # [B, H, S, hd]
+
+
+def _gqa_attention(p, cfg: LMConfig, x, positions):
+    b, s, d = x.shape
+    hd = cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads, hd)
+    k = _split_heads(k, cfg.n_kv_heads, hd)
+    v = _split_heads(v, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = common.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = common.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+    q = constrain(q, "batch", "act_heads", None, None)
+    o = kops.attention(q, k, v, causal=True, window=cfg.window)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    return o @ p["wo"]
+
+
+def _mla_qkv(p, cfg: LMConfig, x, positions):
+    """Returns q_nope, q_rope, k_nope, k_rope, v (full, training/prefill)."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    if cfg.q_lora_rank:
+        cq = common.rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+        q = cq @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, s, h, dn + dr).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    kv_a = x @ p["wkv_a"]                                   # [B, S, kv_lora + dr]
+    c_kv = common.rms_norm(kv_a[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = kv_a[..., cfg.kv_lora_rank:][:, None]          # [B, 1, S, dr] shared
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv).transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    q_rope = common.apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    k_rope = common.apply_rope(k_rope, positions[:, None, :], cfg.rope_theta)
+    return q_nope, q_rope, k_nope, k_rope, v, c_kv
+
+
+def _mla_attention(p, cfg: LMConfig, x, positions):
+    b, s, d = x.shape
+    q_nope, q_rope, k_nope, k_rope, v, _ = _mla_qkv(p, cfg, x, positions)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, k_nope.shape[:-1] + (cfg.qk_rope_dim,))], axis=-1)
+    q = constrain(q, "batch", "act_heads", None, None)
+    o = kops.attention(q, k, v, causal=True, window=None)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * cfg.v_head_dim)
+    return o @ p["wo"]
+
+
+def _attention(p, cfg, x, positions):
+    if cfg.attention == "mla":
+        return _mla_attention(p, cfg, x, positions)
+    return _gqa_attention(p, cfg, x, positions)
+
+
+# ------------------------------------------------------------------------ MoE
+def moe_dispatch(x2d: jnp.ndarray, router: jnp.ndarray, cfg: LMConfig,
+                 dropless: bool = False):
+    """Sort-based top-k dispatch with static capacity.
+
+    dropless=True sizes every expert for the worst case (capacity = T) — used
+    by the decode path, where a capacity drop would silently corrupt a user's
+    token (training tolerates drops; serving must not).
+
+    Returns (slot int32[T*k], token_of int32[T*k], keep bool[T*k],
+    gate f32[T*k], aux_loss, capacity)."""
+    t = x2d.shape[0]
+    e, k = cfg.n_routed, cfg.top_k
+    logits = (x2d.astype(jnp.float32) @ router)             # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # [T, k]
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    inv = jnp.mean(probs, axis=0)
+    frac = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_i, e, dtype=jnp.float32), axis=1), axis=0) / k
+    aux = e * jnp.sum(frac * inv)
+    flat_e = top_i.reshape(-1)                               # [T*k]
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    token_of = order // k
+    capacity = t if dropless else int(np.ceil(t * k / e * cfg.capacity_factor))
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=sorted_e.dtype))
+    pos_in_e = jnp.arange(t * k) - starts[sorted_e]
+    keep = pos_in_e < capacity
+    # dropped entries go to a dedicated trash slot (e*capacity) — writing them
+    # to a clipped in-range slot would clobber a kept token's buffer row
+    slot = jnp.where(keep, sorted_e * capacity + jnp.clip(pos_in_e, 0, capacity - 1),
+                     e * capacity)
+    gate = top_p.reshape(-1)[order]
+    return slot, token_of, keep, gate, aux, capacity
+
+
+def _moe_block_grouped(p, cfg: LMConfig, x2d: jnp.ndarray):
+    """Per-DP-group dispatch (perf path, EXPERIMENTS.md §Perf iteration 1).
+
+    Tokens are grouped [G, T/G] with G sharded over (pod, data); sort /
+    capacity / scatter / gather run *within* each group (vmapped — local per
+    shard, no collectives), and the only cross-device movement of expert
+    inputs is the canonical MoE all-to-all produced by resharding
+    [G@dp, E, C, D] -> [E@model, G@dp, C, D]. With moe_gather_weights the
+    expert weights are all-gathered over their FSDP axis at use (ZeRO-3), so
+    the expert einsums contract unsharded dims locally."""
+    t, d = x2d.shape
+    e, f = cfg.n_routed, cfg.d_ff
+    g = cfg.moe_groups
+    tl = t // g
+    xg = constrain(x2d.reshape(g, tl, d), "act_tokens", None, None)
+
+    def dispatch_one(xb):
+        slot, token_of, keep, gate, aux, cap = moe_dispatch(xb, p["router"], cfg)
+        buf = jnp.zeros((e * cap + 1, d), xb.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], xb[token_of], 0))
+        return buf[:-1].reshape(e, cap, d), (slot, token_of, keep, gate), aux
+
+    xe, meta, aux = jax.vmap(dispatch_one)(xg)          # xe [G, E, C, D]
+    xe = constrain(xe.transpose(1, 0, 2, 3), "expert", "act_tokens", None, None)
+
+    wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+    if cfg.moe_gather_weights:
+        wg = constrain(wg, "expert", None, None)
+        wu = constrain(wu, "expert", None, None)
+        wd = constrain(wd, "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, wg)) * jnp.einsum(
+        "egcd,edf->egcf", xe, wu)
+    ye = jnp.einsum("egcf,efd->egcd", h, wd)            # [E, G, C, D]
+    ye = constrain(ye.transpose(1, 0, 2, 3), "act_tokens", None, None, None)
+
+    def combine_one(ye_g, meta_g):
+        slot, token_of, keep, gate = meta_g
+        flat = jnp.concatenate(
+            [ye_g.reshape(e * ye_g.shape[1], d), jnp.zeros((1, d), ye_g.dtype)])
+        contrib = flat[slot] * (gate * keep)[:, None].astype(ye_g.dtype)
+        return jax.ops.segment_sum(contrib, token_of, num_segments=tl)
+
+    y = jax.vmap(combine_one)(ye, meta).reshape(t, d)
+    y = constrain(y, "act_tokens", None)
+    if cfg.n_shared:
+        sp = p["shared"]
+        hidden = constrain(
+            jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"]),
+            "act_tokens", "act_ff")
+        y = y + hidden @ sp["w_down"]
+    return y, jnp.mean(aux)
+
+
+def _moe_block(p, cfg: LMConfig, x2d: jnp.ndarray, dropless: bool = False):
+    if cfg.moe_groups > 1 and not dropless and x2d.shape[0] % cfg.moe_groups == 0:
+        return _moe_block_grouped(p, cfg, x2d)
+    t, d = x2d.shape
+    e, f = cfg.n_routed, cfg.d_ff
+    x2d = constrain(x2d, "act_tokens", None)
+    slot, token_of, keep, gate, aux, capacity = moe_dispatch(
+        x2d, p["router"], cfg, dropless=dropless)
+    buf = jnp.zeros((e * capacity + 1, d), x2d.dtype)  # +1 trash slot for drops
+    buf = buf.at[slot].set(jnp.where(keep[:, None], x2d[token_of], 0))
+    xe = buf[:-1].reshape(e, capacity, d)
+    xe = constrain(xe, "expert", None, None)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"])
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_down"]).reshape(e * capacity, d)
+    contrib = ye[slot] * (gate * keep)[:, None].astype(ye.dtype)
+    y = jax.ops.segment_sum(contrib, token_of, num_segments=t)
+    y = constrain(y, "act_tokens", None)
+    if cfg.n_shared:
+        sp = p["shared"]
+        hidden = constrain(
+            jax.nn.silu(x2d @ sp["w_gate"]) * (x2d @ sp["w_up"]),
+            "act_tokens", "act_ff")
+        y = y + hidden @ sp["w_down"]
+    return y, aux
+
+
+# ---------------------------------------------------------------------- block
+def _block(p, cfg: LMConfig, x, positions, moe: bool):
+    h = x + _attention(p["attn"], cfg, _apply_norm(cfg, p["ln1"], x), positions)
+    h = constrain(h, "batch", None, None)
+    hn = _apply_norm(cfg, p["ln2"], h)
+    if moe:
+        b, s, d = hn.shape
+        y, aux = _moe_block(p["mlp"], cfg, hn.reshape(b * s, d))
+        y = y.reshape(b, s, d)
+    else:
+        mp = p["mlp"]
+        if cfg.mlp == "gelu" and "w_in" in mp:
+            # Megatron pairing: w_in column-parallel, w_out row-parallel
+            hidden = constrain(common.gelu(hn @ mp["w_in"] + mp["b_in"]),
+                               "batch", None, "act_ff")
+            y = hidden @ mp["w_out"] + mp["b_out"]
+        else:
+            hidden = constrain(
+                jax.nn.silu(hn @ mp["w_gate"]) * (hn @ mp["w_up"]),
+                "batch", None, "act_ff")
+            y = hidden @ mp["w_down"]
+        aux = jnp.float32(0.0)
+    return constrain(h + y, "batch", None, None), aux
+
+
+# -------------------------------------------------------------------- forward
+def forward_hidden(params, cfg: LMConfig, tokens, positions=None, remat: bool = False):
+    """Token ids -> final hidden states [B, S, D] (+ router aux loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, "batch", None, None)
+    aux_total = jnp.float32(0.0)
+
+    def run_stack(x, aux_total, stack, moe):
+        def body(carry, lp):
+            h, aux = carry
+            h2, a = _block(lp, cfg, h, positions, moe)
+            return (h2, aux + a), None
+        if remat == "dots" or remat == "dots_with_no_batch_dims":
+            body = jax.checkpoint(
+                body, prevent_cse=False,
+                policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+        elif remat:  # full remat: save only the layer boundaries
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), stack)
+        return x, aux_total
+
+    if "dense_layers" in params:
+        x, aux_total = run_stack(x, aux_total, params["dense_layers"], moe=False)
+    if "moe_layers" in params:
+        x, aux_total = run_stack(x, aux_total, params["moe_layers"], moe=True)
+    x = _apply_norm(cfg, params["final_norm"], x)
+    return x, aux_total
+
+
+def logits_from_hidden(params, cfg: LMConfig, h):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = h @ head
+    return constrain(logits, "batch", None, "act_heads")
+
+
+def forward(params, cfg: LMConfig, tokens, positions=None, remat: bool = False):
+    h, aux = forward_hidden(params, cfg, tokens, positions, remat)
+    return logits_from_hidden(params, cfg, h), aux
+
+
+def loss_fn(params, cfg: LMConfig, batch, remat: bool = False):
+    """Next-token CE (+ MTP head loss + router aux)."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    h, aux = forward_hidden(params, cfg, tokens, remat=remat)
+    if cfg.fused_ce:
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        loss = common.blockwise_cross_entropy(
+            h, head, labels, batch.get("mask"), block=cfg.fused_ce)
+    else:
+        logits = logits_from_hidden(params, cfg, h)
+        loss = common.cross_entropy(logits, labels, batch.get("mask"))
+    if cfg.mtp and "mtp" in params:
+        mp = params["mtp"]
+        # predict t+2: combine h_t with the embedding of the (t+1) label
+        emb_next = jnp.take(params["embed"], labels, axis=0)
+        comb = jnp.concatenate(
+            [_apply_norm(cfg, mp["norm_h"], h), _apply_norm(cfg, mp["norm_e"], emb_next)],
+            axis=-1) @ mp["proj"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        h2, _ = _block(mp["layer"], cfg, comb, positions, moe=False)
+        logits2 = logits_from_hidden(params, cfg, _apply_norm(cfg, params["final_norm"], h2))
+        labels2 = jnp.roll(labels, -1, axis=1)
+        mask2 = jnp.ones_like(labels2, jnp.float32).at[:, -1:].set(0.0)
+        loss = loss + 0.3 * common.cross_entropy(logits2, labels2, mask2)
+    return loss + cfg.router_aux_coef * aux, {"ce": loss, "aux": aux}
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, max_seq: int):
+    """KV cache pytree. GQA: per-head k/v (ring buffer when windowed);
+    MLA: latent c_kv + shared k_rope only."""
+    dt = _dt(cfg)
+    if cfg.attention == "mla":
+        per_layer = {
+            "ckv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dt),
+            "kr": jnp.zeros((batch, max_seq, cfg.qk_rope_dim), dt),
+        }
+    else:
+        s_cache = min(max_seq, cfg.window) if cfg.window else max_seq
+        per_layer = {
+            "k": jnp.zeros((batch, cfg.n_kv_heads, s_cache, cfg.hd), dt),
+            "v": jnp.zeros((batch, cfg.n_kv_heads, s_cache, cfg.hd), dt),
+        }
+    return {
+        "layers": jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), per_layer
+        ),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def cache_specs(cfg: LMConfig):
+    if cfg.attention == "mla":
+        per_layer = {"ckv": (None, "batch", None, None), "kr": (None, "batch", None, None)}
+    else:
+        per_layer = {"k": (None, "batch", "kv_heads", None, None),
+                     "v": (None, "batch", "kv_heads", None, None)}
+    return {"layers": per_layer, "pos": ()}
+
+
+def _gqa_decode_layer(p, cfg, x, kcache, vcache, pos):
+    """x: [B, 1, D]. Returns (out [B, 1, D], k_new, v_new)."""
+    b = x.shape[0]
+    hd = cfg.hd
+    s_cache = kcache.shape[2]
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = _split_heads(q, cfg.n_heads, hd)       # [B, H, 1, hd]
+    k = _split_heads(k, cfg.n_kv_heads, hd)
+    v = _split_heads(v, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = common.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    posb = jnp.full((b, 1, 1), pos, jnp.int32)
+    q = common.apply_rope(q, posb, cfg.rope_theta)
+    k = common.apply_rope(k, posb, cfg.rope_theta)
+    write = pos % s_cache if cfg.window else pos
+    kcache = jax.lax.dynamic_update_slice(kcache, k, (0, 0, write, 0))
+    vcache = jax.lax.dynamic_update_slice(vcache, v, (0, 0, write, 0))
+    # GQA: fold the group into the q batch for a single matvec
+    group = cfg.n_heads // cfg.n_kv_heads
+    qg = q.reshape(b, cfg.n_kv_heads, group, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        kcache.astype(jnp.float32)) / np.sqrt(hd)
+    idx = jnp.arange(s_cache)
+    if cfg.window:
+        age = pos - jnp.where(idx <= pos % s_cache, pos - pos % s_cache + idx,
+                              pos - pos % s_cache - s_cache + idx)
+        valid = (age >= 0) & (age < cfg.window) & (idx < jnp.minimum(pos + 1, s_cache))
+    else:
+        valid = idx <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", probs, vcache.astype(jnp.float32))
+    o = o.reshape(b, 1, cfg.n_heads * hd).astype(x.dtype)
+    return o @ p["wo"], kcache, vcache
+
+
+def _mla_decode_layer(p, cfg, x, ckv_cache, kr_cache, pos):
+    """Absorbed-MLA decode over the latent cache."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    if cfg.q_lora_rank:
+        cq = common.rms_norm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+        q = cq @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(b, 1, h, dn + dr).transpose(0, 2, 1, 3)    # [B, H, 1, dn+dr]
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    posb = jnp.full((b, 1, 1), pos, jnp.int32)
+    q_rope = common.apply_rope(q_rope, posb, cfg.rope_theta)
+    kv_a = x @ p["wkv_a"]                                    # [B, 1, r + dr]
+    c_new = common.rms_norm(kv_a[..., :r], p["kv_a_norm"], cfg.norm_eps)
+    kr_new = common.apply_rope(kv_a[:, None, :, r:], posb, cfg.rope_theta)[:, 0]
+    ckv_cache = jax.lax.dynamic_update_slice(ckv_cache, c_new, (0, pos, 0))
+    kr_cache = jax.lax.dynamic_update_slice(kr_cache, kr_new, (0, pos, 0))
+    # absorb W_uk into q: q_lat[b,h,r] = q_nope . W_uk[r, h, dn]
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    q_lat = jnp.einsum("bhd,rhd->bhr", q_nope[:, :, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = (
+        jnp.einsum("bhr,bsr->bhs", q_lat, ckv_cache.astype(jnp.float32))
+        + jnp.einsum("bhd,bsd->bhs", q_rope[:, :, 0].astype(jnp.float32),
+                     kr_cache.astype(jnp.float32))
+    ) / np.sqrt(dn + dr)
+    valid = jnp.arange(ckv_cache.shape[1]) <= pos
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bhs,bsr->bhr", probs, ckv_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dv).astype(x.dtype)
+    return o @ p["wo"], ckv_cache, kr_cache
+
+
+def decode_step(params, cfg: LMConfig, token, cache):
+    """One decode step: token int32[B] -> (logits [B, V], new cache)."""
+    b = token.shape[0]
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], token, axis=0)[:, None, :]  # [B, 1, D]
+    x = constrain(x, "batch", None, None)
+    def layer_step(x, lp, lc, moe):
+        hn = _apply_norm(cfg, lp["ln1"], x)
+        if cfg.attention == "mla":
+            o, c1, c2 = _mla_decode_layer(lp["attn"], cfg, hn, lc["ckv"], lc["kr"], pos)
+            new_c = {"ckv": c1, "kr": c2}
+        else:
+            o, c1, c2 = _gqa_decode_layer(lp["attn"], cfg, hn, lc["k"], lc["v"], pos)
+            new_c = {"k": c1, "v": c2}
+        h = x + o
+        hn2 = _apply_norm(cfg, lp["ln2"], h)
+        if moe:
+            y, _ = _moe_block(lp["mlp"], cfg, hn2.reshape(b, -1), dropless=True)
+            y = y.reshape(b, 1, -1)
+        else:
+            mp = lp["mlp"]
+            if cfg.mlp == "gelu" and "w_in" in mp:
+                y = common.gelu(hn2 @ mp["w_in"] + mp["b_in"]) @ mp["w_out"] + mp["b_out"]
+            else:
+                y = common.swiglu(hn2, mp["w_gate"], mp["w_up"], mp["w_down"])
+        return h + y, new_c
+
+    # scan over the dense stack then the moe stack, threading the cache slices
+    cache_layers = cache["layers"]
+    consumed = 0
+    updated_caches = []
+    for stack_name, moe in (("dense_layers", False), ("moe_layers", True)):
+        if stack_name not in params:
+            continue
+        stack = params[stack_name]
+        n_stack = jax.tree.leaves(stack)[0].shape[0]
+        cslice = jax.tree.map(lambda c: c[consumed:consumed + n_stack], cache_layers)
+
+        def body(carry, xs, moe=moe):
+            lp, lc = xs
+            h, new_c = layer_step(carry, lp, lc, moe)
+            return h, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (stack, cslice))
+        updated_caches.append(new_cache)
+        consumed += n_stack
+    new_cache_layers = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *updated_caches
+    ) if len(updated_caches) > 1 else updated_caches[0]
+    h = _apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(params, cfg, h)[:, 0]
+    return logits, {"layers": new_cache_layers, "pos": pos + 1}

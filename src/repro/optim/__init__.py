@@ -1,0 +1,4 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, init_state, state_specs, update, global_norm, clip_by_global_norm,
+)
+from repro.optim import schedules, compression  # noqa: F401

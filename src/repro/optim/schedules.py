@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the int32 step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, warmup_steps: int, total_steps: int,
+                  min_ratio: float = 0.1):
+    """Linear warmup -> cosine decay to min_ratio. Returns a scale in (0, 1]."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+    cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return warm * cos
+
+
+def constant(step, value: float = 1.0):
+    return jnp.float32(value)

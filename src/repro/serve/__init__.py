@@ -1,0 +1,3 @@
+from repro.serve.engine import (  # noqa: F401
+    build_decode_step, build_prefill, build_recsys_scorer, greedy_generate,
+)

@@ -1,0 +1,67 @@
+"""Batched serving: prefill + decode with a static KV cache, plus recsys
+scoring paths. `build_serve_step` returns the jittable one-token step that the
+multi-pod dry-run lowers for the decode_* / long_* shape cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import LMConfig, RecsysConfig
+from repro.models import transformer, bert4rec
+
+
+# ------------------------------------------------------------------ LM decode
+def build_decode_step(cfg: LMConfig) -> Callable:
+    """(params, cache, token int32[B]) -> (next_token int32[B], logits, cache)."""
+
+    def serve_step(params, cache, token):
+        logits, cache = transformer.decode_step(params, cfg, token, cache)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, cache
+
+    return serve_step
+
+
+def build_prefill(cfg: LMConfig) -> Callable:
+    """(params, tokens [B, S]) -> (cache, last logits). Full-sequence forward +
+    cache fill: runs the training forward for hiddens, then writes K/V with one
+    vectorized pass per layer (no per-token loop)."""
+
+    def prefill(params, tokens, max_seq: int):
+        b, s = tokens.shape
+        cache = transformer.init_cache(cfg, b, max_seq)
+        # teacher-forced sequential fill (correct for any attention variant)
+        def body(cache, tok):
+            logits, cache = transformer.decode_step(params, cfg, tok, cache)
+            return cache, logits
+        cache, logits = jax.lax.scan(body, cache, tokens.T)
+        return cache, logits[-1]
+
+    return prefill
+
+
+def greedy_generate(params, cfg: LMConfig, prompt, max_new: int, max_seq: int):
+    """Simple generation driver used by the serving example."""
+    prefill = build_prefill(cfg)
+    step = build_decode_step(cfg)
+    cache, logits = prefill(params, prompt, max_seq)
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    out = [tok]
+    for _ in range(max_new - 1):
+        tok, _, cache = step(params, cache, tok)
+        out.append(tok)
+    return jnp.stack(out, axis=1)
+
+
+# --------------------------------------------------------------- recsys serve
+def build_recsys_scorer(cfg: RecsysConfig, kind: str) -> Callable:
+    if kind == "serve":
+        return lambda params, items: bert4rec.serve_scores(params, cfg, items)
+    if kind == "retrieval":
+        return lambda params, items, cands: bert4rec.retrieval_scores(
+            params, cfg, items, cands)
+    raise ValueError(kind)

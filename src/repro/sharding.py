@@ -1,0 +1,180 @@
+"""Logical-axis sharding rules -> PartitionSpec on the production meshes.
+
+Every parameter / activation in the framework is annotated with a tuple of
+*logical* axis names; `logical_to_physical` maps them onto mesh axes
+according to a rule table. This decouples model code from mesh topology:
+the same model lowers on (data, model), (pod, data, model), or a single
+device (all rules resolve to None).
+
+Parallelism encoded by the default rules:
+  FSDP  — parameter "embed"/"ff_in" dims sharded over the data axis(es)
+  TP    — "heads" / "ff_out" / "vocab" sharded over the model axis
+          (Megatron column/row pairing falls out of the rule table)
+  EP    — "expert" over the model axis (experts live where their TP shard is)
+  SP    — "seq" over the model axis for sequence-parallel activations
+  DP    — "batch" over (pod, data)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes, or None = replicated)
+DEFAULT_RULES: Dict[str, object] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_sp": "model",         # sequence-parallel regions
+    "act_embed": None,
+    "act_heads": "model",
+    "act_kv": "model",
+    "act_ff": "model",         # Megatron TP: ff activation column-sharded
+    "act_tokens": ("pod", "data"),  # flattened token dim (MoE dispatch)
+    # params: attention
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "qk_rope": None,
+    "kv_lora": None,
+    # params: mlp
+    "embed": "data",           # FSDP shard dim
+    "ff": "model",             # TP shard dim (column for in-proj, row for out-proj)
+    # moe
+    "expert": "model",
+    "expert_ff": None,
+    "expert_embed": "data",
+    # embeddings
+    "vocab": "model",
+    "item": "model",
+    "candidates": "model",
+    # gnn / engine
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data", "model"),
+    "feat": None,
+    "words": None,
+    "classes": None,
+    # misc
+    "table_rows": "model",     # recsys embedding tables: row (vocab)-sharded
+    "table_dim": None,
+}
+
+
+def _axes_in_mesh(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def logical_to_physical(
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Dict[str, object]] = None,
+) -> P:
+    """Map a tuple of logical axis names to a PartitionSpec valid on `mesh`."""
+    rules = rules or DEFAULT_RULES
+    avail = _axes_in_mesh(mesh)
+    used = set()
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+            continue
+        phys = rules.get(name)
+        if phys is None:
+            out.append(None)
+            continue
+        if isinstance(phys, str):
+            phys = (phys,)
+        sel = tuple(a for a in phys if a in avail and a not in used)
+        used.update(sel)
+        if not sel:
+            out.append(None)
+        elif len(sel) == 1:
+            out.append(sel[0])
+        else:
+            out.append(sel)
+    return P(*out)
+
+
+def named_sharding(mesh: Mesh, *logical: Optional[str], rules=None) -> NamedSharding:
+    return NamedSharding(mesh, logical_to_physical(logical, mesh, rules))
+
+
+def tree_shardings(spec_tree, mesh: Mesh, rules=None):
+    """Map a pytree of logical-axis tuples to a pytree of NamedShardings."""
+    return jax.tree.map(
+        lambda logical: NamedSharding(mesh, logical_to_physical(logical, mesh, rules)),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )
+
+
+# ---------------------------------------------------------- active mesh ctx
+# Model code annotates activations with logical axes via constrain(); the
+# launcher (cells.py / train.py) installs the concrete mesh here so those
+# annotations become real with_sharding_constraint ops during jit tracing.
+# Without an active mesh (unit tests, single device) constrain is a no-op.
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]):
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+class active_mesh:
+    def __init__(self, mesh: Optional[Mesh]):
+        self.mesh = mesh
+
+    def __enter__(self):
+        self.prev = _ACTIVE_MESH
+        set_active_mesh(self.mesh)
+        return self.mesh
+
+    def __exit__(self, *exc):
+        set_active_mesh(self.prev)
+
+
+def resolve_axis_spec(shape, logical: Sequence[Optional[str]], mesh: Mesh,
+                      rules=None) -> P:
+    """logical axes -> PartitionSpec with a divisibility guard: mesh axes that
+    do not divide the dimension are dropped (prefix-kept for tuples)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = logical_to_physical(logical, mesh, rules)
+    fixed = []
+    for i, ax in enumerate(spec):
+        if ax is None or i >= len(shape):
+            fixed.append(None)
+            continue
+        axes = (ax,) if isinstance(ax, str) else tuple(ax)
+        kept = ()
+        for a in axes:
+            size = 1
+            for b in kept + (a,):
+                size *= sizes[b]
+            if shape[i] % size == 0 and shape[i] > 0:
+                kept = kept + (a,)
+            else:
+                break
+        if not kept:
+            fixed.append(None)
+        elif len(kept) == 1:
+            fixed.append(kept[0])
+        else:
+            fixed.append(kept)
+    fixed = fixed[: len(shape)]
+    fixed += [None] * (len(shape) - len(fixed))
+    return P(*fixed)
+
+
+def constrain(x, *logical: Optional[str], rules=None):
+    """with_sharding_constraint by logical axes against the active mesh;
+    no-op when no mesh is installed."""
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    spec = resolve_axis_spec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

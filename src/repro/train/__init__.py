@@ -1,0 +1,2 @@
+from repro.train.step import TrainConfig, build_train_step, init_state  # noqa: F401
+from repro.train import trainer  # noqa: F401

@@ -1,0 +1,135 @@
+"""Train-step builder: loss -> grads (remat) -> microbatch accumulation ->
+(optional) gradient compression -> AdamW. One builder for all three families.
+
+The returned step is a pure function
+    (state, batch) -> (state, metrics)
+suitable for jax.jit with in/out shardings derived from the model's logical
+specs (launch/dryrun.py, launch/train.py).
+
+Grad accumulation: the global batch is reshaped to [K, micro, ...] and scanned
+— activation memory is bounded by one microbatch, the paper-scale MoE configs
+depend on this (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw, schedules, compression
+from repro.configs.base import LMConfig, GNNConfig, RecsysConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: adamw.AdamWConfig = adamw.AdamWConfig()
+    microbatches: int = 1
+    # True: batches arrive pre-shaped [K, micro, ...] from the data pipeline
+    # (the distributed layout — avoids a resharding reshape inside the step).
+    pre_microbatched: bool = False
+    # False | True (full remat) | "dots" (save matmul outputs, recompute
+    # elementwise — trades HBM for recompute traffic; §Perf iteration knob)
+    remat: object = False
+    compress_grads: bool = False
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def _loss_for(cfg) -> Callable:
+    if isinstance(cfg, LMConfig):
+        from repro.models import transformer
+        return transformer.loss_fn
+    if isinstance(cfg, GNNConfig):
+        from repro.models import gnn
+        return gnn.loss_fn
+    if isinstance(cfg, RecsysConfig):
+        from repro.models import bert4rec
+        return bert4rec.loss_fn
+    raise TypeError(type(cfg))
+
+
+def init_state(rng, model_cfg, tc: TrainConfig, model_init=None, **init_kw):
+    """Returns (state pytree, spec pytree mirroring it)."""
+    if model_init is None:
+        if isinstance(model_cfg, LMConfig):
+            from repro.models import transformer as m
+            model_init = m.init
+        elif isinstance(model_cfg, GNNConfig):
+            from repro.models import gnn as m
+            model_init = m.init
+        else:
+            from repro.models import bert4rec as m
+            model_init = m.init
+    params, pspecs = model_init(rng, model_cfg, **init_kw)
+    state = {
+        "params": params,
+        "opt": adamw.init_state(params, tc.optimizer),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    specs = {
+        "params": pspecs,
+        "opt": adamw.state_specs(pspecs),
+        "step": (),
+    }
+    if tc.compress_grads:
+        state["ef"] = compression.init_error_feedback(params)
+        specs["ef"] = pspecs
+    return state, specs
+
+
+def build_train_step(model_cfg, tc: TrainConfig) -> Callable:
+    loss_fn = _loss_for(model_cfg)
+    k = tc.microbatches
+
+    def micro_loss(params, mb):
+        if isinstance(model_cfg, LMConfig):
+            loss, metrics = loss_fn(params, model_cfg, mb, remat=tc.remat)
+        else:
+            loss, metrics = loss_fn(params, model_cfg, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(micro_loss, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if k > 1:
+            if tc.pre_microbatched:
+                micro = batch
+            else:
+                micro = jax.tree.map(
+                    lambda x: x.reshape((k, x.shape[0] // k) + x.shape[1:]), batch
+                )
+
+            def body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (zeros, jnp.float32(0.0)), micro)
+            grads = jax.tree.map(lambda g: g / k, grads)
+            loss = loss_sum / k
+        else:
+            (loss, _), grads = grad_fn(params, batch)
+
+        new_state = dict(state)
+        if tc.compress_grads:
+            grads, new_state["ef"] = compression.compress_grads(grads, state["ef"])
+
+        lr_scale = schedules.warmup_cosine(
+            state["step"], warmup_steps=tc.warmup_steps, total_steps=tc.total_steps
+        )
+        new_params, new_opt, om = adamw.update(
+            grads, state["opt"], params, tc.optimizer, lr_scale=lr_scale
+        )
+        new_state["params"] = new_params
+        new_state["opt"] = new_opt
+        new_state["step"] = state["step"] + 1
+        metrics = {"loss": loss, "lr_scale": lr_scale, **om}
+        return new_state, metrics
+
+    return train_step

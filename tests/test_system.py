@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests for the paper's system.
+
+Covers the Fig. 2 pathological structures (the paper's own justification for
+each constraint class), needle-in-a-haystack planted patterns, match
+enumeration counts vs the brute-force oracle, and the analytic scenario APIs
+(categories (a)-(e) of §1).
+"""
+import numpy as np
+import pytest
+
+from repro.graph.structs import Graph
+from repro.graph import generators as gen
+from repro.core.template import Template, generate_constraints
+from repro.core.pipeline import prune
+from repro.core.enumerate import enumerate_matches
+from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
+
+
+def test_fig2a_unrolled_cycle_defeats_lcc_but_not_cc():
+    """Fig 2(a): a 3-cycle template; a 9-cycle background with repeating labels
+    survives LCC (every vertex sees both neighbor labels) but must be fully
+    eliminated by cycle checking."""
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    g = gen.cycle_graph(9, [0, 1, 2] * 3)
+    res = prune(g, tmpl)
+    assert res.counts() == {"V*": 0, "E*": 0}
+
+
+def test_fig2c_torus_defeats_cc_but_not_tds():
+    """Fig 2(c) flavor: structures that satisfy all single-cycle constraints
+    but contain no clique match require TDS."""
+    # two 4-cliques sharing a triangle -- the paper's template (c)
+    tmpl = Template(
+        [0, 0, 0, 0, 0],
+        [(0, 1), (0, 2), (1, 2), (1, 3), (2, 3), (2, 4), (1, 4), (3, 4)],
+    )
+    g = gen.torus_graph(4, 3, np.zeros(12, dtype=np.int32))
+    res = prune(g, tmpl)
+    oracle_v, _, _, matches = solution_subgraph_oracle(g, tmpl)
+    assert not matches  # torus has no 4-clique
+    assert res.counts()["V*"] == 0
+
+
+def test_planted_needle_in_haystack():
+    """Plant 3 copies of a labeled diamond in an R-MAT background; the pruned
+    graph must contain exactly the planted matches (plus any natural ones ==
+    oracle agreement)."""
+    pattern = Graph.from_undirected_pairs(
+        4, [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)], [7, 8, 9, 8]
+    )
+    bg = gen.rmat_graph(8, edge_factor=4, seed=3, labeler="random", n_labels=6)
+    g = gen.planted_pattern_graph(bg, pattern, n_copies=3, seed=5)
+    tmpl = Template([7, 8, 9, 8], [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)])
+    res = prune(g, tmpl)
+    vm, em, omega_o, matches = solution_subgraph_oracle(g, tmpl)
+    assert len(matches) >= 3 * 2  # 3 copies x |Aut| (q1<->q3 swap)
+    assert np.array_equal(res.vertex_mask, vm)
+    order = np.lexsort((g.src, g.dst))
+    assert np.array_equal(res.edge_mask, em[order])
+
+
+def test_enumeration_count_matches_oracle():
+    g = gen.erdos_renyi_graph(150, 6.0, seed=1, n_labels=3)
+    tmpl = Template([0, 1, 2, 1], [(0, 1), (1, 2), (2, 3)])
+    res = prune(g, tmpl)
+    enum = enumerate_matches(res.dg, res.state, tmpl)
+    oracle = enumerate_matches_bruteforce(g, tmpl)
+    assert enum.n_embeddings == len(oracle)
+
+
+def test_category_a_existence_and_d_counting():
+    """Categories (a) yes/no and (d) counting from §1 fall out of the pipeline."""
+    g = gen.cycle_graph(6, [0, 1, 0, 1, 0, 1])
+    tmpl = Template([0, 1], [(0, 1)])
+    res = prune(g, tmpl)
+    assert res.counts()["V*"] == 6  # exists
+    enum = enumerate_matches(res.dg, res.state, tmpl)
+    assert enum.n_embeddings == 6  # one orientation per edge (q0 -> label 0)
+
+
+def test_omega_annotation_is_exact_superset_free():
+    """The per-vertex match lists (omega) returned after a precision-guaranteed
+    run contain exactly the (v, q) pairs realized by some match (paper: 'for
+    each vertex in the pruned graph, a list of its possible matches')."""
+    g = gen.erdos_renyi_graph(120, 5.0, seed=2, n_labels=3)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl)
+    _, _, omega_o, _ = solution_subgraph_oracle(g, tmpl)
+    assert np.array_equal(res.omega, omega_o)
+
+
+def test_no_match_fully_prunes():
+    g = gen.star_graph(10, center_label=0, leaf_label=1)
+    tmpl = Template([0, 1, 1], [(0, 1), (1, 2), (0, 2)])  # triangle, absent
+    res = prune(g, tmpl)
+    assert res.counts() == {"V*": 0, "E*": 0}
+
+
+def test_single_vertex_template():
+    g = gen.star_graph(4, center_label=3, leaf_label=1)
+    res = prune(g, Template([1], []))
+    assert res.counts()["V*"] == 4
