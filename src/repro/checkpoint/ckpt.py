@@ -52,6 +52,8 @@ def save_checkpoint(
     manifest = {
         "step": step,
         "keys": [k for k, _ in pairs],
+        "shapes": [list(arrays[f"a{i}"].shape) for i in range(len(pairs))],
+        "dtypes": [str(arrays[f"a{i}"].dtype) for i in range(len(pairs))],
         "treedef": str(treedef),
         "meta": extra_meta or {},
     }
@@ -94,9 +96,13 @@ def restore_checkpoint(
     step: Optional[int] = None,
     shardings: Any = None,
 ) -> Tuple[Any, Dict]:
-    """Restore into the structure of `like_tree`; apply `shardings` (same pytree
-    structure or a single sharding) with jax.device_put — this is where elastic
-    re-sharding onto a different mesh happens."""
+    """Restore into the structure of `like_tree`; commit every restored array
+    onto the caller's `shardings` (a pytree of the target mesh's
+    NamedShardings, or a single sharding) with jax.device_put BEFORE any
+    pjit'd step sees it — this is where elastic re-sharding onto a different
+    device count / mesh shape happens. Restored global shapes are validated
+    against `like_tree` so a config/topology mismatch fails here with a
+    named leaf instead of deep inside pjit."""
     if step is None:
         step = latest_step(directory)
         if step is None:
@@ -111,10 +117,49 @@ def restore_checkpoint(
         raise ValueError(
             f"checkpoint has {len(manifest['keys'])} leaves, expected {n}"
         )
-    leaves = [data[f"a{i}"] for i in range(n)]
+    shapes = manifest.get("shapes")
+    dtypes = manifest.get("dtypes")
+    leaves = []
+    for i, like in enumerate(leaves_like):
+        arr = data[f"a{i}"]
+        # manifest vs npz: on-disk corruption / partial write, independent
+        # of what the caller asks for
+        if shapes is not None and list(arr.shape) != list(shapes[i]):
+            raise ValueError(
+                f"checkpoint leaf {manifest['keys'][i]!r}: arrays.npz has "
+                f"shape {tuple(arr.shape)} but the manifest recorded "
+                f"{tuple(shapes[i])} — corrupt checkpoint"
+            )
+        if dtypes is not None and str(arr.dtype) != dtypes[i]:
+            raise ValueError(
+                f"checkpoint leaf {manifest['keys'][i]!r}: arrays.npz has "
+                f"dtype {arr.dtype} but the manifest recorded {dtypes[i]} — "
+                f"corrupt checkpoint"
+            )
+        # checkpoint vs restore target: a config/topology mismatch
+        want = getattr(like, "shape", None)
+        if want is not None and tuple(arr.shape) != tuple(want):
+            raise ValueError(
+                f"checkpoint leaf {manifest['keys'][i]!r} has global shape "
+                f"{tuple(arr.shape)}, expected {tuple(want)} — the restore "
+                f"target was built from a different config"
+            )
+        leaves.append(arr)
     tree = jax.tree_util.tree_unflatten(treedef, leaves)
     if shardings is not None:
-        tree = jax.device_put(tree, shardings)
+        # Leaf-wise put when the shardings tree mirrors the state tree (the
+        # shardings_for output), whole-tree put for a single sharding.
+        try:
+            flat_sh = treedef.flatten_up_to(shardings)
+        except (ValueError, TypeError):
+            flat_sh = None
+        if flat_sh is not None:
+            tree = jax.tree_util.tree_unflatten(
+                treedef,
+                [jax.device_put(l, s) for l, s in zip(leaves, flat_sh)],
+            )
+        else:
+            tree = jax.device_put(tree, shardings)
     return tree, manifest["meta"] | {"step": manifest["step"]}
 
 

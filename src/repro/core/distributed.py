@@ -156,7 +156,7 @@ def make_shard_map_engine(mesh, axis_names, part_arrays: Dict[str, jnp.ndarray],
     treats the flattened product as the shard axis (pure data-parallel
     irregular workload; see DESIGN.md §4).
     """
-    shard_map = jax.shard_map
+    from repro.kernels import compat
 
     ax = axis_names if isinstance(axis_names, tuple) else (axis_names,)
     spec_shard = P(ax)
@@ -182,7 +182,7 @@ def make_shard_map_engine(mesh, axis_names, part_arrays: Dict[str, jnp.ndarray],
         )
         return om[None], ea[None], it
 
-    fn = shard_map(
+    fn = compat.shard_map(
         step,
         mesh=mesh,
         in_specs=(spec_shard, spec_shard, shard_specs),

@@ -149,15 +149,11 @@ def lcc_iteration_packed(
     return PruneState(omega=omega, edge_active=edge_active), changed
 
 
-def lcc_fixpoint(
-    dg: DeviceGraph,
-    tdev: TemplateDev,
-    state: PruneState,
-    max_iters: int = 1000,
-    stats: Optional[dict] = None,
-) -> PruneState:
-    """Iterate LCC to fixpoint (Alg. 3 do-while). Device while_loop so the
-    whole fixpoint is a single XLA computation (one dispatch)."""
+def _fixpoint(iter_fn, state: PruneState, max_iters: int,
+              stats: Optional[dict], extra_stat: Optional[str] = None
+              ) -> PruneState:
+    """Shared do-while driver: device while_loop so the whole fixpoint is a
+    single XLA computation (one dispatch). `iter_fn(state) -> (state, changed)`."""
 
     def cond(carry):
         st, changed, it = carry
@@ -165,7 +161,7 @@ def lcc_fixpoint(
 
     def body(carry):
         st, _, it = carry
-        st2, changed = lcc_iteration(dg, tdev, st)
+        st2, changed = iter_fn(st)
         return st2, changed, it + 1
 
     init = (state, jnp.asarray(True), jnp.asarray(0))
@@ -173,4 +169,41 @@ def lcc_fixpoint(
     if stats is not None:
         stats["lcc_iterations"] = stats.get("lcc_iterations", 0) + int(iters)
         stats["lcc_calls"] = stats.get("lcc_calls", 0) + 1
+        if extra_stat is not None:
+            stats[extra_stat] = stats.get(extra_stat, 0) + 1
     return final_state
+
+
+def lcc_fixpoint(
+    dg: DeviceGraph,
+    tdev: TemplateDev,
+    state: PruneState,
+    max_iters: int = 1000,
+    stats: Optional[dict] = None,
+) -> PruneState:
+    """Iterate LCC to fixpoint (Alg. 3 do-while)."""
+    return _fixpoint(
+        lambda st: lcc_iteration(dg, tdev, st), state, max_iters, stats)
+
+
+def lcc_fixpoint_packed(
+    dg: DeviceGraph,
+    tdev: TemplateDev,
+    state: PruneState,
+    blocked,
+    max_iters: int = 1000,
+    stats: Optional[dict] = None,
+    force_pallas: bool = False,
+) -> PruneState:
+    """LCC fixpoint through the packed-word sweep (the bitset_spmm kernel via
+    the registry dispatch on TPU, its oracle elsewhere).
+
+    Degrades to the boolean-plane `lcc_fixpoint` when no blocked structure is
+    given or the template needs same-label multiplicity counts (the OR kernel
+    carries no counts)."""
+    if blocked is None or tdev.needs_counts:
+        return lcc_fixpoint(dg, tdev, state, max_iters, stats)
+    return _fixpoint(
+        lambda st: lcc_iteration_packed(
+            dg, tdev, st, blocked, force_pallas=force_pallas),
+        state, max_iters, stats, extra_stat="lcc_packed_calls")

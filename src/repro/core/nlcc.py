@@ -50,6 +50,52 @@ def _frontier_hop(
 import functools
 
 
+def check_walk_constraint_packed(
+    dg: DeviceGraph,
+    state: PruneState,
+    walk_candidacy: jnp.ndarray,  # bool[L+1, n] candidacy per walk position
+    is_cyclic: bool,
+    source_ids: jnp.ndarray,  # int32[S] wave source ids, -1 = pad; S % 32 == 0
+    blocked,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """One CC/PC wave with the S token planes bit-packed into uint32 words:
+    each hop is a single bitset OR-SpMM through the kernel registry — the
+    same blocked kernel as the LCC sweep, 32x fewer aggregation bytes than
+    the boolean-plane hop. Returns survived bool[S] (no message counting —
+    the packed OR absorbs duplicates before they can be counted)."""
+    from repro.core.state import pack_bits, unpack_bits
+    from repro.kernels import ops as kops
+
+    n = state.omega.shape[0]
+    S = source_ids.shape[0]
+    assert S % 32 == 0, "packed frontier needs a word-aligned wave size"
+    L = walk_candidacy.shape[0] - 1
+    safe_src = jnp.clip(source_ids, 0, n - 1)
+
+    frontier = jnp.zeros((n, S), dtype=bool)
+    frontier = frontier.at[safe_src, jnp.arange(S)].set(
+        (source_ids >= 0) & jnp.take(walk_candidacy[0], safe_src)
+    )
+    packed = pack_bits(frontier)  # uint32[n, S/32]
+    for r in range(1, L + 1):
+        agg = kops.bitset_or_aggregate(
+            packed, dg.src, dg.dst, n, state.edge_active,
+            blocked=blocked, force_pallas=force_pallas,
+        )
+        packed = jnp.where(walk_candidacy[r][:, None], agg, jnp.uint32(0))
+    frontier = unpack_bits(packed, S)
+
+    if is_cyclic:
+        survived = frontier[safe_src, jnp.arange(S)]
+    else:
+        arrived_any = jnp.any(frontier, axis=0)
+        arrived_self = frontier[safe_src, jnp.arange(S)]
+        arrived_elsewhere = jnp.sum(frontier, axis=0) > arrived_self.astype(jnp.int32)
+        survived = arrived_any & arrived_elsewhere
+    return survived & (source_ids >= 0)
+
+
 @functools.partial(jax.jit, static_argnames=("is_cyclic", "count_messages"))
 def check_walk_constraint(
     dg: DeviceGraph,
@@ -164,9 +210,15 @@ def verify_constraint(
     count_messages: bool = False,
     edge_prune: bool = False,
     template=None,
+    blocked=None,
+    force_pallas: bool = False,
 ) -> PruneState:
     """Alg. 5 for CC/PC (+ each rotation for cycles): eliminate the head
     template vertex from omega of every failing token source.
+
+    With `blocked` set (and message counting off), waves run through the
+    packed-frontier hop (`check_walk_constraint_packed`) — the registry routes
+    it onto the bitset kernel on TPU and its oracle elsewhere.
 
     edge_prune=True (requires template) additionally eliminates arcs that lie
     on NO completing walk for the template arcs this constraint covers — a
@@ -194,15 +246,33 @@ def verify_constraint(
         if sources.size == 0:
             continue
         keep = np.zeros(omega.shape[0], dtype=bool)
+        # packed waves only where the kernel actually runs (TPU, or pinned
+        # with force_pallas): off-TPU the packed hop is the same survivors
+        # with extra pack/unpack per hop and no single-jit wave
+        from repro.kernels import compat as _compat
+
+        use_packed = (
+            blocked is not None and not count_messages and wave % 32 == 0
+            and (force_pallas or _compat.on_tpu())
+        )
         for off in range(0, sources.size, wave):
             ids = sources[off : off + wave]
             pad = wave - ids.size
             ids_padded = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
-            survived, n_msgs = check_walk_constraint(
-                dg, PruneState(omega=omega, edge_active=state.edge_active),
-                cand, walk[0] == walk[-1], jnp.asarray(ids_padded, jnp.int32),
-                count_messages=count_messages,
-            )
+            wave_state = PruneState(omega=omega, edge_active=state.edge_active)
+            if use_packed:
+                survived = check_walk_constraint_packed(
+                    dg, wave_state, cand, walk[0] == walk[-1],
+                    jnp.asarray(ids_padded, jnp.int32),
+                    blocked, force_pallas=force_pallas,
+                )
+                n_msgs = 0
+            else:
+                survived, n_msgs = check_walk_constraint(
+                    dg, wave_state,
+                    cand, walk[0] == walk[-1], jnp.asarray(ids_padded, jnp.int32),
+                    count_messages=count_messages,
+                )
             survived = np.asarray(survived)[: ids.size]
             keep[ids[survived]] = True
             if stats is not None:

@@ -24,7 +24,9 @@ import jax.numpy as jnp
 from repro.graph.structs import Graph, DeviceGraph
 from repro.core.template import Template, generate_constraints, NonLocalConstraint
 from repro.core.state import PruneState, init_state
-from repro.core.lcc import TemplateDev, lcc_iteration, lcc_fixpoint
+from repro.core.lcc import (
+    TemplateDev, lcc_iteration, lcc_fixpoint, lcc_fixpoint_packed,
+)
 from repro.core import nlcc as nlcc_mod
 from repro.core import tds as tds_mod
 
@@ -94,7 +96,13 @@ def prune(
     constraints: Optional[List[NonLocalConstraint]] = None,
     initial_state: Optional[PruneState] = None,
     collect_stats: bool = False,
+    blocked=None,
+    force_pallas: bool = False,
 ) -> PruneResult:
+    """`blocked` (a graph.blocked.BlockedStructure) routes every LCC sweep and
+    eligible NLCC frontier hop through the packed bitset kernel via the
+    registry dispatch — compiled on TPU, reference oracle elsewhere;
+    `force_pallas` pins the interpret-mode kernel path for parity testing."""
     if isinstance(graph, Graph):
         if label_freq is None:
             label_freq = graph.label_frequency()
@@ -111,7 +119,8 @@ def prune(
 
     # --- initial LCC
     t0 = time.perf_counter()
-    state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats)
+    state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
+                 blocked=blocked, force_pallas=force_pallas)
     phases.append(_snapshot(state, "LCC", None, time.perf_counter() - t0, {}))
 
     # --- NLCC loop
@@ -142,6 +151,7 @@ def prune(
                 dg, state, c, template.labels, wave=wave, stats=cstats,
                 count_messages=collect_stats,
                 edge_prune=nlcc_edge_prune, template=template,
+                blocked=blocked, force_pallas=force_pallas,
             )
         else:
             state = tds_mod.verify_tds_constraint(
@@ -155,7 +165,8 @@ def prune(
         )
         if after != before:
             t0 = time.perf_counter()
-            state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats)
+            state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
+                         blocked=blocked, force_pallas=force_pallas)
             phases.append(_snapshot(state, "LCC", None, time.perf_counter() - t0, {}))
 
     for k, v in stats.items():
@@ -163,10 +174,14 @@ def prune(
     return PruneResult(state, template, dg, phases, stats)
 
 
-def _lcc(dg, tdev, state, edge_elimination, stats, collect_stats):
+def _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
+         blocked=None, force_pallas=False):
     if not edge_elimination:
         # ablation: run vertex elimination but keep every endpoint-active edge
         return _lcc_no_edge_elim(dg, tdev, state, stats)
+    if blocked is not None and not collect_stats and not tdev.needs_counts:
+        return lcc_fixpoint_packed(
+            dg, tdev, state, blocked, stats=stats, force_pallas=force_pallas)
     if collect_stats:
         # python loop to count per-iteration messages (active arcs at send time)
         it = 0

@@ -5,7 +5,28 @@
   flash_attention — causal/GQA/sliding-window attention (LM hot loop)
   embedding_bag   — scalar-prefetch gather + VMEM bag reduce (recsys hot loop)
 
-Use through `repro.kernels.ops` (jit'd wrappers, TPU->pallas / CPU->ref
-dispatch); `repro.kernels.ref` holds the pure-jnp oracles.
+Dispatch contract
+-----------------
+Every kernel is declared in the registry (`repro.kernels.registry`) with
+three parts: its Pallas entrypoint, its pure-jnp oracle from `ref.py`
+(identical numerics contract — parity tests enforce allclose), and a
+shape-eligibility predicate. Public callers go through the jit'd wrappers in
+`repro.kernels.ops`; per call, `registry.dispatch()` picks exactly one of:
+
+  pallas-compiled    eligible call on a TPU backend
+  pallas-interpret   eligible call with force_pallas=True off-TPU (tests)
+  reference oracle   ineligible shapes, or off-TPU without force_pallas
+
+A Pallas attempt that dies with an API-drift error is trapped back to the
+oracle (with a RuntimeWarning) unless force_pallas pins the kernel path.
+
+Compat invariant
+----------------
+No module outside `repro.kernels.compat` may touch version-gated JAX API
+surface: the TPU compiler-params class (renamed across 0.4.x -> 0.5), the
+mesh axis-type enum, mesh-construction kwargs, or the shard_map
+location/signature. Kernels use `compat.pallas_call` / `compat.vmem` /
+`compat.prefetch_scalar_grid_spec`; engine and launch code use
+`compat.make_mesh` / `compat.shard_map`.
 """
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import compat, ops, ref, registry  # noqa: F401

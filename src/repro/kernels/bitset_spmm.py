@@ -31,7 +31,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _unpack_words_f32(words: jnp.ndarray) -> jnp.ndarray:
@@ -85,7 +86,7 @@ def bitset_spmm(
     """OR-aggregate packed words along active arcs; returns uint32[n_pad, W]."""
     nnzb = masks.shape[0]
     w = vals.shape[1]
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=1,
         grid=(nnzb,),
         in_specs=[
@@ -93,14 +94,12 @@ def bitset_spmm(
             pl.BlockSpec((bn, w), lambda b, pairs: (pairs[b, 1], 0)),
         ],
         out_specs=pl.BlockSpec((bn, w), lambda b, pairs: (pairs[b, 0], 0)),
-        scratch_shapes=[pltpu.VMEM((bn, 32 * w), jnp.float32)],
+        scratch_shapes=[compat.vmem((bn, 32 * w), jnp.float32)],
     )
-    return pl.pallas_call(
+    return compat.pallas_call(
         _kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_pad, w), jnp.uint32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
     )(pairs, masks, vals)

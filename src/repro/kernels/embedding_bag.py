@@ -21,7 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _kernel(ids_ref, weights_ref, counts_ref, row_ref, out_ref, acc_ref, *, l, mean):
@@ -56,22 +57,20 @@ def embedding_bag(
     flat_w = weights.reshape(-1)
     counts = jnp.sum((weights != 0.0).astype(jnp.int32), axis=1)
 
-    grid_spec = pltpu.PrefetchScalarGridSpec(
+    grid_spec = compat.prefetch_scalar_grid_spec(
         num_scalar_prefetch=3,  # ids, weights, counts
         grid=(bsz * l,),
         in_specs=[
             pl.BlockSpec((1, d), lambda i, ids, w, c: (ids[i], 0)),
         ],
         out_specs=pl.BlockSpec((1, d), lambda i, ids, w, c: (i // l, 0)),
-        scratch_shapes=[pltpu.VMEM((1, d), jnp.float32)],
+        scratch_shapes=[compat.vmem((1, d), jnp.float32)],
     )
     kernel = functools.partial(_kernel, l=l, mean=(mode == "mean"))
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, d), table.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",),
-        ),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
     )(flat_ids, flat_w, counts, table)

@@ -22,7 +22,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 MIN_LANE = 128
 NEG_INF = -1e30
@@ -108,7 +109,7 @@ def flash_attention(
         _attn_kernel, scale=scale, causal=causal, window=window,
         bq=block_q, bk=block_k, num_kv_blocks=nk,
     )
-    return pl.pallas_call(
+    return compat.pallas_call(
         kernel,
         grid=(b, hq, nq, nk),
         in_specs=[
@@ -119,12 +120,10 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
         out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
-            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),
-            pltpu.VMEM((block_q, d), jnp.float32),
+            compat.vmem((block_q, MIN_LANE), jnp.float32),
+            compat.vmem((block_q, MIN_LANE), jnp.float32),
+            compat.vmem((block_q, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
-        ),
+        dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(q, k, v)

@@ -1,13 +1,18 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the Pallas kernels, routed through the registry.
 
-Dispatch contract: on TPU backends the `pl.pallas_call` kernels run compiled;
-everywhere else the pure-jnp oracle from ref.py is used (identical numerics
-contract — kernel tests enforce allclose). Tests may force the kernel path in
-interpret mode with force_pallas=True.
+Dispatch contract (single choke point — `repro.kernels.registry.dispatch`):
+every wrapper below registers its Pallas entrypoint, its pure-jnp oracle from
+ref.py, and a shape-eligibility predicate; per call the registry picks exactly
+one of pallas-compiled (eligible + TPU backend), pallas-interpret (eligible +
+force_pallas off-TPU — the kernel-parity test path), or the reference oracle
+(ineligible shapes, or off-TPU without force_pallas). A Pallas failure caused
+by JAX/Pallas API drift is trapped to the oracle unless force_pallas is set.
+
+The wrappers own only pre/post-processing that is mode-independent (blocked
+mask construction, PNA mean/std derivation, long-sequence blockwise choice).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import numpy as np
@@ -16,17 +21,50 @@ import jax.numpy as jnp
 
 from repro.graph.blocked import BlockedStructure, masks_from_active, pad_values
 from repro.kernels import ref as _ref
+from repro.kernels import registry
 from repro.kernels.bitset_spmm import bitset_spmm as _bitset_spmm_pallas
-from repro.kernels.segment_agg import segment_agg as _segment_agg_pallas
+from repro.kernels.segment_agg import (
+    TILE_F as SEGMENT_AGG_TILE_F,
+    TILE_N as SEGMENT_AGG_TILE_N,
+    segment_agg as _segment_agg_pallas,
+)
 from repro.kernels.flash_attention import flash_attention as _flash_pallas
 from repro.kernels.embedding_bag import embedding_bag as _embedding_bag_pallas
 
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# Sequences longer than this lower the flash-semantics XLA path on the ref
+# side (O(S * block) live memory) instead of the materialized S x S oracle.
+ATTENTION_BLOCKWISE_CUTOFF = 2048
 
 
 # ------------------------------------------------------------- bitset_spmm
+def _bitset_pallas(vals, dg_src, dg_dst, n, edge_active, blocked, *, interpret):
+    masks = masks_from_active(blocked, edge_active)
+    out = _bitset_spmm_pallas(
+        jnp.asarray(blocked.pairs), masks, pad_values(vals, blocked),
+        bn=blocked.bn, n_pad=blocked.n_pad, interpret=interpret,
+    )
+    # dst blocks with no adjacency block are never visited by the grid
+    touched = np.zeros(blocked.n_pad // blocked.bn, dtype=bool)
+    touched[blocked.pairs[:, 0]] = True
+    trow = jnp.repeat(jnp.asarray(touched), blocked.bn)[:, None]
+    return jnp.where(trow, out, jnp.uint32(0))[:n]
+
+
+def _bitset_ref(vals, dg_src, dg_dst, n, edge_active, blocked):
+    return _ref.bitset_spmm_ref(vals, dg_src, dg_dst, n, edge_active)
+
+
+registry.register(
+    "bitset_spmm",
+    pallas=_bitset_pallas,
+    ref=_bitset_ref,
+    eligible=lambda vals, dg_src, dg_dst, n, edge_active, blocked: (
+        blocked is not None
+    ),
+    doc="blocked bit-packed OR-SpMM (LCC/NLCC edge sweep)",
+)
+
+
 def bitset_or_aggregate(
     vals: jnp.ndarray,          # uint32[n, W] packed per-vertex words
     dg_src: jnp.ndarray,        # int32[m] dst-sorted
@@ -37,21 +75,29 @@ def bitset_or_aggregate(
     force_pallas: bool = False,
 ) -> jnp.ndarray:
     """OR-aggregate packed words along active arcs -> uint32[n, W]."""
-    if blocked is not None and (force_pallas or _on_tpu()):
-        masks = masks_from_active(blocked, edge_active)
-        out = _bitset_spmm_pallas(
-            jnp.asarray(blocked.pairs), masks, pad_values(vals, blocked),
-            bn=blocked.bn, n_pad=blocked.n_pad, interpret=not _on_tpu(),
-        )
-        # dst blocks with no adjacency block are never visited by the grid
-        touched = np.zeros(blocked.n_pad // blocked.bn, dtype=bool)
-        touched[blocked.pairs[:, 0]] = True
-        trow = jnp.repeat(jnp.asarray(touched), blocked.bn)[:, None]
-        return jnp.where(trow, out, jnp.uint32(0))[:n]
-    return _ref.bitset_spmm_ref(vals, dg_src, dg_dst, n, edge_active)
+    return registry.dispatch(
+        "bitset_spmm", vals, dg_src, dg_dst, n, edge_active, blocked,
+        force_pallas=force_pallas,
+    )
 
 
 # ------------------------------------------------------------- segment_agg
+def _segment_agg_eligible(feats, mask):
+    nt, _, f = feats.shape
+    return nt % SEGMENT_AGG_TILE_N == 0 and f % SEGMENT_AGG_TILE_F == 0
+
+
+registry.register(
+    "segment_agg",
+    pallas=lambda feats, mask, *, interpret: _segment_agg_pallas(
+        feats, mask, interpret=interpret
+    ),
+    ref=_ref.segment_agg_ref,
+    eligible=_segment_agg_eligible,
+    doc="fused sum/min/max/sumsq neighborhood aggregation (PNA bank)",
+)
+
+
 def neighborhood_agg(
     feats: jnp.ndarray,   # [NT, D, F] gathered neighbor features
     mask: jnp.ndarray,    # bool[NT, D]
@@ -59,12 +105,7 @@ def neighborhood_agg(
     force_pallas: bool = False,
 ) -> dict:
     """Fused sum/mean/min/max/std neighborhood aggregation (PNA's bank)."""
-    nt, d, f = feats.shape
-    use_kernel = force_pallas or _on_tpu()
-    if use_kernel and nt % 8 == 0 and f % 128 == 0:
-        raw = _segment_agg_pallas(feats, mask, interpret=not _on_tpu())
-    else:
-        raw = _ref.segment_agg_ref(feats, mask)
+    raw = registry.dispatch("segment_agg", feats, mask, force_pallas=force_pallas)
     s, mn, mx, sq = raw[:, 0], raw[:, 1], raw[:, 2], raw[:, 3]
     deg = jnp.maximum(degrees, 1.0)[:, None]
     empty = (degrees <= 0)[:, None]
@@ -82,6 +123,38 @@ def neighborhood_agg(
 
 
 # --------------------------------------------------------- flash_attention
+def _attention_eligible(q, k, v, *, causal=True, window=None,
+                        block_q=128, block_k=128):
+    s = q.shape[2]
+    return (
+        s % block_q == 0 and s % block_k == 0
+        and q.shape[3] >= 128 and q.shape[3] == v.shape[3]
+    )
+
+
+def _attention_ref(q, k, v, *, causal=True, window=None,
+                   block_q=128, block_k=128):
+    if q.shape[2] > ATTENTION_BLOCKWISE_CUTOFF:
+        # flash-semantics XLA path: O(S * block) live memory; this is what the
+        # dry-run lowers for long sequences on non-TPU backends (and the MLA
+        # d_qk != d_v case everywhere).
+        return _ref.attention_blockwise(q, k, v, causal=causal, window=window)
+    return _ref.attention_ref(q, k, v, causal=causal, window=window)
+
+
+registry.register(
+    "flash_attention",
+    pallas=lambda q, k, v, *, interpret, causal=True, window=None,
+    block_q=128, block_k=128: _flash_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    ),
+    ref=_attention_ref,
+    eligible=_attention_eligible,
+    doc="causal/GQA/sliding-window flash attention (LM hot loop)",
+)
+
+
 def attention(
     q: jnp.ndarray,
     k: jnp.ndarray,
@@ -93,23 +166,25 @@ def attention(
     block_k: int = 128,
     force_pallas: bool = False,
 ) -> jnp.ndarray:
-    s = q.shape[2]
-    same_dims = q.shape[3] == v.shape[3]
-    usable = s % block_q == 0 and s % block_k == 0 and q.shape[3] >= 128 and same_dims
-    if (force_pallas or _on_tpu()) and usable:
-        return _flash_pallas(
-            q, k, v, causal=causal, window=window,
-            block_q=block_q, block_k=block_k, interpret=not _on_tpu(),
-        )
-    if s > 2048:
-        # flash-semantics XLA path: O(S * block) live memory; this is what the
-        # dry-run lowers for long sequences on non-TPU backends (and the MLA
-        # d_qk != d_v case everywhere).
-        return _ref.attention_blockwise(q, k, v, causal=causal, window=window)
-    return _ref.attention_ref(q, k, v, causal=causal, window=window)
+    return registry.dispatch(
+        "flash_attention", q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, force_pallas=force_pallas,
+    )
 
 
 # ----------------------------------------------------------- embedding_bag
+registry.register(
+    "embedding_bag",
+    pallas=lambda table, ids, weights, *, interpret, mode="sum": (
+        _embedding_bag_pallas(table, ids, weights, mode=mode, interpret=interpret)
+    ),
+    ref=lambda table, ids, weights, *, mode="sum": (
+        _ref.embedding_bag_ref(table, ids, weights, mode=mode)
+    ),
+    doc="scalar-prefetch gather + VMEM bag reduce (recsys hot loop)",
+)
+
+
 def embedding_bag(
     table: jnp.ndarray,
     ids: jnp.ndarray,
@@ -120,8 +195,7 @@ def embedding_bag(
 ) -> jnp.ndarray:
     if weights is None:
         weights = jnp.ones(ids.shape, jnp.float32)
-    if force_pallas or _on_tpu():
-        return _embedding_bag_pallas(
-            table, ids, weights, mode=mode, interpret=not _on_tpu()
-        )
-    return _ref.embedding_bag_ref(table, ids, weights, mode=mode)
+    return registry.dispatch(
+        "embedding_bag", table, ids, weights, mode=mode,
+        force_pallas=force_pallas,
+    )

@@ -1,0 +1,127 @@
+"""Declarative kernel registry — one `dispatch()` for every Pallas kernel.
+
+Each kernel registers three things:
+
+  pallas_fn   the Pallas entrypoint, called as pallas_fn(*args, interpret=…, **kw)
+  ref_fn      the pure-jnp oracle from ref.py with the same call signature
+              (minus `interpret`) and identical numerics contract
+  eligible    a shape-eligibility predicate over the same arguments: False
+              means the Pallas formulation cannot express this call (missing
+              blocked structure, tile-misaligned shapes, d_qk != d_v, …)
+
+`dispatch(name, *args, force_pallas=…, backend=…, **kw)` then picks exactly
+one of three modes (`resolve_mode` exposes the decision for tests):
+
+  "pallas"     compiled Pallas — eligible call on a TPU backend
+  "interpret"  Pallas interpreter — eligible call, force_pallas=True off-TPU
+               (the kernel-parity test path)
+  "ref"        reference oracle — ineligible shapes, or off-TPU without
+               force_pallas
+
+A Pallas attempt that dies with an API-drift error (compat.PALLAS_TRAP_ERRORS)
+is trapped and re-run through the reference oracle — unless force_pallas was
+set, in which case the error propagates so parity tests stay strict.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.kernels import compat
+
+MODE_PALLAS = "pallas"
+MODE_INTERPRET = "interpret"
+MODE_REF = "ref"
+
+
+def _always_eligible(*args, **kwargs) -> bool:
+    return True
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    name: str
+    pallas_fn: Callable[..., Any]
+    ref_fn: Callable[..., Any]
+    eligible: Callable[..., bool]
+    doc: str = ""
+
+
+_REGISTRY: Dict[str, KernelSpec] = {}
+
+
+def register(
+    name: str,
+    *,
+    pallas: Callable[..., Any],
+    ref: Callable[..., Any],
+    eligible: Callable[..., bool] = _always_eligible,
+    doc: str = "",
+) -> KernelSpec:
+    """Register (or re-register) a kernel under `name`."""
+    spec = KernelSpec(name=name, pallas_fn=pallas, ref_fn=ref,
+                      eligible=eligible, doc=doc)
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get(name: str) -> KernelSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"no kernel {name!r} registered; known: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_mode(
+    name: str,
+    *args,
+    force_pallas: bool = False,
+    backend: Optional[str] = None,
+    **kwargs,
+) -> str:
+    """The routing decision `dispatch` will take, without executing anything."""
+    spec = get(name)
+    if not spec.eligible(*args, **kwargs):
+        return MODE_REF
+    if (backend or jax.default_backend()) == "tpu":
+        return MODE_PALLAS
+    if force_pallas:
+        return MODE_INTERPRET
+    return MODE_REF
+
+
+def dispatch(
+    name: str,
+    *args,
+    force_pallas: bool = False,
+    backend: Optional[str] = None,
+    **kwargs,
+):
+    """Run kernel `name` through the mode `resolve_mode` picks."""
+    spec = get(name)
+    mode = resolve_mode(
+        name, *args, force_pallas=force_pallas, backend=backend, **kwargs
+    )
+    if mode == MODE_REF:
+        return spec.ref_fn(*args, **kwargs)
+    try:
+        return spec.pallas_fn(*args, interpret=(mode == MODE_INTERPRET), **kwargs)
+    except compat.PALLAS_TRAP_ERRORS as e:
+        if force_pallas:
+            raise
+        warnings.warn(
+            f"pallas kernel {name!r} failed on jax=={jax.__version__} "
+            f"({type(e).__name__}: {e}); falling back to the reference oracle",
+            RuntimeWarning,
+            stacklevel=2,
+        )
+        return spec.ref_fn(*args, **kwargs)

@@ -21,9 +21,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 BIG = 3.0e38
+
+# Default VPU tile: 8 sublanes x 128 lanes (f32). The ops-layer eligibility
+# predicate imports these — retune here and dispatch stays consistent.
+TILE_N = 8
+TILE_F = 128
 
 
 def _kernel(feats_ref, mask_ref, out_ref):
@@ -42,13 +48,13 @@ def segment_agg(
     feats: jnp.ndarray,  # [NT, D, F]
     mask: jnp.ndarray,   # bool[NT, D]
     *,
-    tile_n: int = 8,
-    tile_f: int = 128,
+    tile_n: int = TILE_N,
+    tile_f: int = TILE_F,
     interpret: bool = False,
 ) -> jnp.ndarray:
     nt, d, f = feats.shape
     assert nt % tile_n == 0 and f % tile_f == 0, (nt, f, tile_n, tile_f)
-    return pl.pallas_call(
+    return compat.pallas_call(
         _kernel,
         grid=(nt // tile_n, f // tile_f),
         in_specs=[
@@ -57,8 +63,6 @@ def segment_agg(
         ],
         out_specs=pl.BlockSpec((tile_n, 4, tile_f), lambda i, j: (i, 0, j)),
         out_shape=jax.ShapeDtypeStruct((nt, 4, f), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel"),
-        ),
+        dimension_semantics=("parallel", "parallel"),
         interpret=interpret,
     )(feats, mask)

@@ -35,7 +35,7 @@ _SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
 _HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
 _INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
 _OPERAND_REF_RE = re.compile(r"%([\w.\-]+)")
-_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
@@ -287,14 +287,20 @@ class HloCostModel:
                 total.bytes += site_bytes
             elif op in ("fusion", "call", "async-start"):
                 cm = _CALLS_RE.search(ins.attrs)
+                inner = None
                 if cm and cm.group(1) in self.computations:
                     inner = self.cost(cm.group(1))
                     total.flops += inner.flops
                     for k, v in inner.coll.items():
                         total.coll[k] = total.coll.get(k, 0.0) + v
-                    if op == "call":
-                        total.bytes += inner.bytes
-                total.bytes += site_bytes
+                if op == "call" and inner is not None:
+                    # a resolved call is a transparent wrapper: the callee
+                    # charged its own instruction bytes (incl. slice-aware
+                    # fusion operand accounting) — charging the call site's
+                    # operands again would re-bill whole arrays per call
+                    total.bytes += inner.bytes
+                else:
+                    total.bytes += site_bytes
             elif op == "conditional":
                 bm = _BRANCHES_RE.search(ins.attrs)
                 if bm:

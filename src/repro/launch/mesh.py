@@ -1,10 +1,14 @@
 """Production meshes. Functions, not module constants — importing this module
 never touches jax device state (required by smoke tests that must see 1 CPU
-device)."""
+device). Construction goes through the version-adaptive compat layer so
+axis-type annotations degrade gracefully on JAX lines without
+typed mesh axes."""
 from __future__ import annotations
 
 import jax
 from jax.sharding import Mesh
+
+from repro.kernels import compat
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -13,13 +17,13 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     One pod = 256 chips (TPU v5e-256); the pod axis crosses DCN."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return compat.make_mesh(shape, axes, axis_types=("auto",) * len(axes))
 
 
 def make_local_mesh() -> Mesh:
     """Whatever this host has — used by examples and tests."""
     n = len(jax.devices())
-    return jax.make_mesh((n, 1), ("data", "model"))
+    return compat.make_mesh((n, 1), ("data", "model"))
 
 
 def mesh_chips(mesh: Mesh) -> int:

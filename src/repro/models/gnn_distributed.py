@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import GNNConfig
+from repro.kernels import compat
 
 
 def aggregate_sweep(x_local, send_src_local, recv_dst_local, n_local, axes,
@@ -113,7 +114,7 @@ def build_distributed_pna_loss(cfg: GNNConfig, mesh: Mesh, axes: Tuple[str, ...]
         den = jax.lax.psum(jnp.sum(mk), axes)
         return num / jnp.maximum(den, 1.0)
 
-    sharded = jax.shard_map(
+    sharded = compat.shard_map(
         local_loss,
         mesh=mesh,
         in_specs=(spec_rep, spec_shard, spec_shard, spec_shard, spec_shard,

@@ -1,0 +1,250 @@
+"""Compat/registry dispatch contract (CPU-runnable):
+
+  - routing: force_pallas off-TPU -> interpret mode, ineligible shapes -> ref,
+    plain CPU calls -> ref, for all four registered kernels,
+  - parity: the interpret-mode Pallas path and the reference oracle agree
+    (allclose / exact) through the SAME public ops wrapper,
+  - trap-to-ref: a Pallas entrypoint that dies with an API-drift error falls
+    back to the oracle unless force_pallas pins the kernel path,
+  - compat shims: make_mesh accepts axis-type names on this JAX, shard_map
+    resolves, packed NLCC frontier equals the boolean-plane wave.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.graph.blocked import build_blocked_structure
+from repro.graph.structs import DeviceGraph
+from repro.graph import generators as gen
+from repro.kernels import compat, ops, ref, registry
+
+
+def _graph_args(scale=6, w=2, bn=64):
+    g = gen.rmat_graph(scale, edge_factor=4, seed=scale)
+    dg = DeviceGraph.from_host(g)
+    rng = np.random.default_rng(scale)
+    vals = jnp.asarray(rng.integers(0, 2**32, size=(g.n, w), dtype=np.uint32))
+    active = jnp.asarray(rng.random(dg.m) < 0.7)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=bn)
+    return (vals, dg.src, dg.dst, g.n, active, bs)
+
+
+def _attn_args(s=256, d=128):
+    rng = np.random.default_rng(s)
+    q = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.3, jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.3, jnp.float32)
+    v = jnp.asarray(rng.standard_normal((1, 2, s, d)) * 0.3, jnp.float32)
+    return (q, k, v)
+
+
+def _seg_args(nt=8, dd=5, f=128):
+    rng = np.random.default_rng(nt + f)
+    feats = jnp.asarray(rng.standard_normal((nt, dd, f)), jnp.float32)
+    mask = jnp.asarray(rng.random((nt, dd)) < 0.8)
+    return (feats, mask)
+
+
+def _bag_args(v=200, d=128, b=4, l=3):
+    rng = np.random.default_rng(v)
+    table = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    ids = jnp.asarray(rng.integers(0, v, size=(b, l)), jnp.int32)
+    weights = jnp.asarray((rng.random((b, l)) < 0.9), jnp.float32)
+    return (table, ids, weights)
+
+
+def test_all_four_kernels_registered():
+    assert registry.names() == (
+        "bitset_spmm", "embedding_bag", "flash_attention", "segment_agg",
+    )
+
+
+# --------------------------------------------------------------- routing
+CASES = [
+    ("bitset_spmm", _graph_args(), {}),
+    ("segment_agg", _seg_args(), {}),
+    ("flash_attention", _attn_args(), {"causal": True, "window": None,
+                                       "block_q": 128, "block_k": 128}),
+    ("embedding_bag", _bag_args(), {"mode": "sum"}),
+]
+
+
+@pytest.mark.parametrize("name,args,kw", CASES, ids=[c[0] for c in CASES])
+def test_force_pallas_routes_to_interpret_off_tpu(name, args, kw):
+    assert registry.resolve_mode(
+        name, *args, force_pallas=True, backend="cpu", **kw
+    ) == registry.MODE_INTERPRET
+
+
+@pytest.mark.parametrize("name,args,kw", CASES, ids=[c[0] for c in CASES])
+def test_cpu_without_force_routes_to_ref(name, args, kw):
+    assert registry.resolve_mode(
+        name, *args, backend="cpu", **kw
+    ) == registry.MODE_REF
+
+
+@pytest.mark.parametrize("name,args,kw", CASES, ids=[c[0] for c in CASES])
+def test_tpu_backend_routes_to_compiled_pallas(name, args, kw):
+    assert registry.resolve_mode(
+        name, *args, backend="tpu", **kw
+    ) == registry.MODE_PALLAS
+
+
+INELIGIBLE = [
+    # no blocked structure -> the kernel's grid cannot be built
+    ("bitset_spmm", _graph_args()[:5] + (None,), {}),
+    # NT % tile_n != 0
+    ("segment_agg", _seg_args(nt=6), {}),
+    # S not divisible by the kv block
+    ("flash_attention", _attn_args(s=300), {"causal": True, "window": None,
+                                            "block_q": 128, "block_k": 128}),
+    # d_qk != d_v (MLA regime) — kernel assumes same dims
+    ("flash_attention",
+     (_attn_args()[0], _attn_args()[1], _attn_args()[2][..., :64]),
+     {"causal": True, "window": None, "block_q": 128, "block_k": 128}),
+]
+
+
+@pytest.mark.parametrize("name,args,kw", INELIGIBLE,
+                         ids=["no-blocked", "tile-misaligned", "seq-misaligned",
+                              "dqk-ne-dv"])
+def test_ineligible_shapes_route_to_ref_even_forced(name, args, kw):
+    assert registry.resolve_mode(
+        name, *args, force_pallas=True, backend="cpu", **kw
+    ) == registry.MODE_REF
+    assert registry.resolve_mode(
+        name, *args, backend="tpu", **kw
+    ) == registry.MODE_REF
+
+
+# ---------------------------------------------------------------- parity
+def test_bitset_spmm_parity_through_wrapper():
+    vals, src, dst, n, active, bs = _graph_args()
+    got = ops.bitset_or_aggregate(vals, src, dst, n, active,
+                                  blocked=bs, force_pallas=True)
+    want = ops.bitset_or_aggregate(vals, src, dst, n, active, blocked=None)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_segment_agg_parity_through_wrapper():
+    feats, mask = _seg_args()
+    deg = jnp.sum(mask, axis=1).astype(jnp.float32)
+    got = ops.neighborhood_agg(feats, mask, deg, force_pallas=True)
+    want = ops.neighborhood_agg(feats, mask, deg, force_pallas=False)
+    for key in ("sum", "mean", "min", "max", "std"):
+        np.testing.assert_allclose(np.asarray(got[key]), np.asarray(want[key]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_attention_parity_through_wrapper():
+    q, k, v = _attn_args()
+    got = ops.attention(q, k, v, causal=True, force_pallas=True)
+    want = ops.attention(q, k, v, causal=True, force_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_embedding_bag_parity_through_wrapper():
+    table, ids, weights = _bag_args()
+    got = ops.embedding_bag(table, ids, weights, mode="mean", force_pallas=True)
+    want = ops.embedding_bag(table, ids, weights, mode="mean")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ----------------------------------------------------------- trap-to-ref
+def test_trap_to_ref_falls_back_unless_forced():
+    calls = {"pallas": 0, "ref": 0}
+
+    def broken_pallas(x, *, interpret):
+        calls["pallas"] += 1
+        raise AttributeError("module has no attribute (simulated API drift)")
+
+    def oracle(x):
+        calls["ref"] += 1
+        return x + 1
+
+    registry.register("_test_broken", pallas=broken_pallas, ref=oracle)
+    try:
+        with pytest.warns(RuntimeWarning, match="falling back"):
+            out = registry.dispatch("_test_broken", jnp.asarray(1),
+                                    backend="tpu")
+        assert int(out) == 2 and calls == {"pallas": 1, "ref": 1}
+        with pytest.raises(AttributeError):
+            registry.dispatch("_test_broken", jnp.asarray(1),
+                              force_pallas=True, backend="cpu")
+    finally:
+        registry._REGISTRY.pop("_test_broken", None)
+
+
+def test_unknown_kernel_name_is_a_clear_error():
+    with pytest.raises(KeyError, match="no kernel"):
+        registry.dispatch("nope", 1)
+
+
+# ---------------------------------------------------------------- compat
+def test_make_mesh_accepts_axis_type_names():
+    n = len(jax.devices())
+    mesh = compat.make_mesh((n,), ("data",), axis_types=("auto",))
+    assert mesh.axis_names == ("data",)
+    assert mesh.devices.size == n
+
+
+def test_shard_map_resolves_on_this_jax():
+    mesh = compat.make_mesh((1,), ("x",))
+    from jax.sharding import PartitionSpec as P
+
+    f = compat.shard_map(lambda a: a * 2, mesh=mesh,
+                         in_specs=(P(),), out_specs=P(), check_vma=False)
+    np.testing.assert_array_equal(
+        np.asarray(f(jnp.arange(4))), np.arange(4) * 2)
+
+
+def test_tpu_compiler_params_resolves_dimension_semantics():
+    params = compat.tpu_compiler_params(dimension_semantics=("arbitrary",))
+    assert params is not None
+    assert tuple(params.dimension_semantics) == ("arbitrary",)
+
+
+# ----------------------------------------- packed NLCC frontier integration
+def test_packed_walk_constraint_matches_boolean_plane():
+    from repro.core import Template, init_state
+    from repro.core.nlcc import (
+        check_walk_constraint, check_walk_constraint_packed,
+    )
+    from repro.core.state import PruneState
+
+    g = gen.erdos_renyi_graph(120, 5.0, seed=9, n_labels=3)
+    dg = DeviceGraph.from_host(g)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    st = init_state(dg, tmpl)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst),
+                                 g.n, bn=64)
+    walk = (0, 1, 2, 0)
+    cand = jnp.stack([st.omega[:, q] for q in walk], axis=0)
+    sources = np.flatnonzero(np.asarray(st.omega[:, 0]))[:32]
+    ids = np.full(32, -1, np.int64)
+    ids[: sources.size] = sources
+    ids = jnp.asarray(ids, jnp.int32)
+
+    want, _ = check_walk_constraint(dg, st, cand, True, ids)
+    got = check_walk_constraint_packed(dg, st, cand, True, ids, bs)
+    got_forced = check_walk_constraint_packed(
+        dg, st, cand, True, ids, bs, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_forced), np.asarray(want))
+
+
+def test_prune_with_blocked_structure_matches_default():
+    from repro.core import Template, prune
+
+    g = gen.erdos_renyi_graph(100, 5.0, seed=3, n_labels=3)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    dg = DeviceGraph.from_host(g)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst),
+                                 g.n, bn=64)
+    base = prune(g, tmpl)
+    packed = prune(g, tmpl, blocked=bs)
+    np.testing.assert_array_equal(base.omega, packed.omega)
+    np.testing.assert_array_equal(base.vertex_mask, packed.vertex_mask)
+    np.testing.assert_array_equal(base.edge_mask, packed.edge_mask)

@@ -87,6 +87,7 @@ SHARD_MAP_SCRIPT = textwrap.dedent(
         make_shard_map_engine, init_distributed_state, TemplateMasks,
     )
     from repro.core.state import unpack_bits
+    from repro.kernels.compat import make_mesh
 
     g = rmat_graph(9, edge_factor=6, seed=5)
     tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
@@ -94,8 +95,10 @@ SHARD_MAP_SCRIPT = textwrap.dedent(
     tdev = TemplateDev(tmpl)
     st = lcc_fixpoint(dg, tdev, init_state(dg, tmpl))
 
-    mesh = jax.make_mesh((8,), ("shards",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # axis types resolved by the compat shim: "auto" maps onto the mesh
+    # axis-type enum where it exists, and is dropped on JAX lines (0.4.x)
+    # that predate typed mesh axes.
+    mesh = make_mesh((8,), ("shards",), axis_types=("auto",))
     part = partition_graph(g, 8)
     eng = make_shard_map_engine(mesh, ("shards",), part.device_arrays(),
                                 TemplateMasks(tdev))

@@ -41,8 +41,12 @@ def test_checkpoint_restores_onto_different_mesh():
                 state, specs = init_state(jax.random.key(0), cfg, tc)
                 sh = shardings_for(jax.eval_shape(lambda: state), specs, mesh)
                 state = jax.device_put(state, sh)
+                # out_shardings pins the output state onto the same
+                # NamedShardings as the input; leaving it unspecified lets
+                # GSPMD drift the state sharding between iterations, which
+                # the declared in_shardings then rejects.
                 step = jax.jit(build_train_step(cfg, tc),
-                               in_shardings=(sh, None), out_shardings=None)
+                               in_shardings=(sh, None), out_shardings=(sh, None))
                 stream = SyntheticTokenStream(cfg.vocab, 8, 32, seed=0)
                 for i in range(3):
                     state, metrics = step(state, stream(i))

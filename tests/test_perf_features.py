@@ -112,14 +112,13 @@ def test_distributed_pna_matches_single_device():
     assert "PARITY_OK" in out.stdout, out.stdout + out.stderr
 
 
-from hypothesis import given, settings, strategies as st, HealthCheck
+try:  # optional dev dependency: the property test degrades to a skip
+    from hypothesis import given, settings, strategies as st, HealthCheck
+except ImportError:
+    given = None
 
 
-@settings(max_examples=12, deadline=None,
-          suppress_health_check=[HealthCheck.too_slow])
-@given(seed=st.integers(0, 10_000), n_labels=st.integers(3, 6),
-       cyc_len=st.integers(3, 6))
-def test_nlcc_edge_prune_fast_path_exact(seed, n_labels, cyc_len):
+def _nlcc_edge_prune_fast_path_exact(seed, n_labels, cyc_len):
     """Beyond-paper claim: CC + forward-backward frontier edge pruning yields
     the exact solution subgraph for unique-label cycle templates WITHOUT the
     complete-walk TDS. Property-tested against the brute-force oracle."""
@@ -142,6 +141,18 @@ def test_nlcc_edge_prune_fast_path_exact(seed, n_labels, cyc_len):
     assert np.array_equal(res.vertex_mask, vm)
     assert np.array_equal(res.edge_mask, em[order])
     assert np.array_equal(res.omega, om)
+
+
+if given is not None:
+    @settings(max_examples=12, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(0, 10_000), n_labels=st.integers(3, 6),
+           cyc_len=st.integers(3, 6))
+    def test_nlcc_edge_prune_fast_path_exact(seed, n_labels, cyc_len):
+        _nlcc_edge_prune_fast_path_exact(seed, n_labels, cyc_len)
+else:
+    def test_nlcc_edge_prune_fast_path_exact():
+        pytest.importorskip("hypothesis")
 
 
 def test_nlcc_edge_prune_cactus_exact():
