@@ -1,21 +1,30 @@
 """Shared benchmark infrastructure.
 
 Every benchmark module exposes run(scale) -> dict and maps 1:1 to a paper
-table/figure (DESIGN.md §7). Scales:
-  small  — CI-sized (seconds; the default for benchmarks.run)
-  medium — minutes on one CPU host
-Results are appended to experiments/bench/<name>.json.
+table/figure (DESIGN.md §7; docs/BENCHMARKS.md has the full map). Scales —
+all three accepted by `graph_for` and `benchmarks.run --scale`:
+  small  — R-MAT scale 11 (~2k vertices); CI-sized (seconds; the default
+           for benchmarks.run)
+  medium — R-MAT scale 14 (~16k vertices); minutes on one CPU host
+  large  — R-MAT scale 16 (~65k vertices); tens of minutes on CPU, the
+           smallest scale where kernel-mode choices start to matter
+Per-suite results land in experiments/bench/<name>.json; `benchmarks.run`
+additionally writes the repo-root BENCH_pipeline.json roll-up (see
+`write_rollup` — per-suite wall time, phase breakdown, tuned dispatch
+decisions, graph scale) so every PR's perf delta is visible in one file.
 """
 from __future__ import annotations
 
 import json
 import os
 import time
-from typing import Callable, Dict
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 OUT_DIR = os.environ.get("REPRO_BENCH_OUT", "experiments/bench")
+
+ROLLUP_SCHEMA_VERSION = 1
 
 # WDC-flavored templates over degree-labeled R-MAT graphs. Labels follow
 # l(v) = ceil(log2(deg+1)); mid-frequency labels (3..6) are abundant the way
@@ -60,6 +69,85 @@ def _np_default(o):
 
 
 def graph_for(scale_name: str, seed: int = 0):
+    """R-MAT background graph for a named scale ("small"/"medium"/"large")."""
     from repro.graph import generators as gen
     scale = {"small": 11, "medium": 14, "large": 16}[scale_name]
     return gen.rmat_graph(scale, edge_factor=8, preset="graph500", seed=seed)
+
+
+# ------------------------------------------------------- perf-trajectory roll-up
+def rollup_path() -> str:
+    """Repo-root perf roll-up location (env REPRO_BENCH_ROLLUP overrides)."""
+    return os.environ.get("REPRO_BENCH_ROLLUP", "BENCH_pipeline.json")
+
+
+def validate_rollup(payload: Dict) -> None:
+    """Raise ValueError unless `payload` is a schema-valid BENCH_pipeline.json
+    roll-up. The schema is load-bearing: tests/test_policy.py pins it and the
+    CI smoke-benchmark job gates on it, so additions are fine but renames and
+    removals are breaking."""
+    def need(d, key, types, where):
+        if key not in d:
+            raise ValueError(f"roll-up {where} missing key {key!r}")
+        if not isinstance(d[key], types):
+            raise ValueError(
+                f"roll-up {where}[{key!r}] is {type(d[key]).__name__}, "
+                f"expected {types}")
+
+    if not isinstance(payload, dict):
+        raise ValueError("roll-up payload must be a dict")
+    need(payload, "schema_version", int, "root")
+    if payload["schema_version"] != ROLLUP_SCHEMA_VERSION:
+        raise ValueError(
+            f"roll-up schema_version {payload['schema_version']} != "
+            f"{ROLLUP_SCHEMA_VERSION}")
+    need(payload, "scale", str, "root")
+    need(payload, "backend", str, "root")
+    need(payload, "jax", str, "root")
+    need(payload, "graph", dict, "root")
+    need(payload, "suites", dict, "root")
+    need(payload, "phases", list, "root")
+    need(payload, "policy", dict, "root")
+    for name, suite in payload["suites"].items():
+        need(suite, "seconds", (int, float), f"suites[{name!r}]")
+        need(suite, "ok", bool, f"suites[{name!r}]")
+    for i, ph in enumerate(payload["phases"]):
+        need(ph, "phase", str, f"phases[{i}]")
+        need(ph, "seconds", (int, float), f"phases[{i}]")
+
+
+def write_rollup(
+    suites: Dict[str, Dict],
+    scale: str,
+    *,
+    graph: Optional[Dict] = None,
+    phases: Optional[List[Dict]] = None,
+    path: Optional[str] = None,
+) -> str:
+    """Write the repo-root BENCH_pipeline.json perf-trajectory roll-up.
+
+    suites  {suite_name: {"seconds": wall, "ok": bool, ...}} per-suite timings
+    graph   {"n": ..., "m": ...} background-graph scale actually benchmarked
+    phases  [{"phase": "LCC", "seconds": ...}, ...] pipeline phase breakdown
+    The tuned dispatch decisions (chosen kernel modes + packed/unpacked
+    routes) come from the active registry policy. Validates before writing.
+    """
+    import jax
+    from repro.kernels import registry
+
+    policy = registry.get_policy()
+    payload = {
+        "schema_version": ROLLUP_SCHEMA_VERSION,
+        "scale": scale,
+        "backend": jax.default_backend(),
+        "jax": jax.__version__,
+        "graph": dict(graph or {}),
+        "suites": suites,
+        "phases": list(phases or []),
+        "policy": policy.to_json() if policy is not None else {},
+    }
+    validate_rollup(payload)
+    out = path or rollup_path()
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True, default=_np_default)
+    return out

@@ -1,0 +1,142 @@
+"""Beyond-paper: benchmark-driven dispatch-policy autotune (the measurement
+behind ROADMAP's "benchmark the packed NLCC frontier hop and packed LCC
+fixpoint and decide the default").
+
+Sweeps, on the live backend:
+  - kernel modes for `bitset_spmm` at the two shapes the pipeline actually
+    issues (LCC sweep width W = ceil(n0/32), NLCC wave width W = wave/32) —
+    pallas-compiled on TPU, pallas-interpret, and the reference oracle,
+  - packed vs unpacked routing for the LCC fixpoint sweep and the NLCC
+    frontier hop over the WDC-like templates,
+then persists the winners to the dispatch-policy cache
+(`registry.policy_path()`), and re-runs the full prune pipeline per template
+under the tuned policy to report the end-to-end phase breakdown the
+BENCH_pipeline.json roll-up records.
+
+GraphPi-style rationale: measured per-shape schedule selection beats any
+fixed heuristic; the win flips with graph/machine shape, so the decision is
+re-tunable per host (docs/BENCHMARKS.md "Re-tuning on new hardware").
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.lcc import LCC_ROUTE, TemplateDev, lcc_iteration, lcc_iteration_packed, lcc_route_bucket
+from repro.core.nlcc import (
+    NLCC_ROUTE, check_walk_constraint, check_walk_constraint_packed,
+    nlcc_route_bucket,
+)
+from repro.core.pipeline import prune
+from repro.core.state import init_state, pack_bits
+from repro.core.template import Template
+from repro.graph.blocked import build_blocked_structure
+from repro.graph.structs import DeviceGraph
+from repro.kernels import registry
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save
+
+WAVE = 1024  # prune()'s default NLCC wave width
+
+
+def _route_template() -> Template:
+    # T3-square: monocyclic, distinct labels -> no multiplicity counts, so
+    # both the packed and unpacked LCC sweeps are exercisable
+    labels, edges = WDC_LIKE_TEMPLATES["T3-square"]
+    return Template(labels, edges)
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    dg = DeviceGraph.from_host(g)
+    bs = build_blocked_structure(
+        np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=256)
+    backend = jax.default_backend()
+
+    tmpl = _route_template()
+    tdev = TemplateDev(tmpl)
+    st = init_state(dg, tmpl)
+
+    # measure against the pure eligibility fallback, not a stale cache
+    registry.set_policy(None)
+
+    # --- kernel-mode cases: the two bitset_spmm shapes the pipeline issues
+    lcc_vals = pack_bits(st.omega)  # uint32[n, ceil(n0/32)]
+    walk = (0, 1, 2, 3, 0)
+    cand = jnp.stack([st.omega[:, q] for q in walk], axis=0)
+    sources = np.flatnonzero(np.asarray(st.omega[:, 0]))[:WAVE]
+    ids = np.full(WAVE, -1, np.int64)
+    ids[: sources.size] = sources
+    ids = jnp.asarray(ids, jnp.int32)
+    safe = jnp.clip(ids, 0, g.n - 1)
+    frontier = jnp.zeros((g.n, WAVE), dtype=bool)
+    frontier = frontier.at[safe, jnp.arange(WAVE)].set(
+        (ids >= 0) & jnp.take(cand[0], safe))
+    nlcc_vals = pack_bits(frontier)  # uint32[n, WAVE/32]
+
+    cases = [
+        ("bitset_spmm", (lcc_vals, dg.src, dg.dst, g.n, st.edge_active, bs), {}),
+        ("bitset_spmm", (nlcc_vals, dg.src, dg.dst, g.n, st.edge_active, bs), {}),
+    ]
+
+    # --- route cases: one LCC sweep / one NLCC wave, packed vs unpacked
+    routes = [
+        (LCC_ROUTE, lcc_route_bucket(st, dg), {
+            registry.ROUTE_PACKED: lambda: lcc_iteration_packed(
+                dg, tdev, st, bs)[0].omega,
+            registry.ROUTE_UNPACKED: lambda: lcc_iteration(
+                dg, tdev, st)[0].omega,
+        }),
+        (NLCC_ROUTE, nlcc_route_bucket(st, WAVE), {
+            registry.ROUTE_PACKED: lambda: check_walk_constraint_packed(
+                dg, st, cand, True, ids, bs),
+            registry.ROUTE_UNPACKED: lambda: check_walk_constraint(
+                dg, st, cand, True, ids)[0],
+        }),
+    ]
+
+    policy = registry.tune(cases=cases, routes=routes, repeat=3)
+
+    # --- end-to-end: full prune per WDC template under the tuned policy
+    patterns: Dict[str, Dict] = {}
+    phase_totals: Dict[str, float] = {}
+    for name, (labels, edges) in WDC_LIKE_TEMPLATES.items():
+        res = prune(g, Template(labels, edges), blocked=bs)
+        for p in res.phases:
+            phase_totals[p.phase] = phase_totals.get(p.phase, 0.0) + p.seconds
+        patterns[name] = {
+            "total_seconds": sum(p.seconds for p in res.phases),
+            "phases": [
+                {"phase": p.phase, "constraint": p.constraint,
+                 "seconds": p.seconds, "V*": p.active_vertices,
+                 "E*": p.active_edges}
+                for p in res.phases
+            ],
+            "solution": res.counts(),
+            "dispatch_routes": res.stats.get("dispatch_routes", {}),
+        }
+
+    out = {
+        "graph": {"n": g.n, "m": g.m},
+        "backend": backend,
+        "jax": jax.__version__,
+        "policy_path": registry.policy_path(),
+        "policy": policy.to_json(),
+        "decisions": {
+            "modes": {k: e.choice for k, e in policy.modes.items()},
+            "routes": {k: e.choice for k, e in policy.routes.items()},
+        },
+        "phase_breakdown": [
+            {"phase": k, "seconds": v} for k, v in sorted(phase_totals.items())
+        ],
+        "patterns": patterns,
+    }
+    save("dispatch_policy", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=1, default=str))

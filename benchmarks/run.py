@@ -1,9 +1,17 @@
 """Run the full benchmark suite (one module per paper table/figure).
 
-  PYTHONPATH=src python -m benchmarks.run [--scale small|medium] [--only NAME]
+  PYTHONPATH=src python -m benchmarks.run [--scale small|medium|large] [--only NAME]
 
-Results land in experiments/bench/<name>.json; a compact summary prints at
-the end. Roofline terms come from the dry-run (launch/dryrun.py), not here.
+Per-suite results land in experiments/bench/<name>.json; the perf-trajectory
+roll-up (per-suite wall time, pipeline phase breakdown, tuned dispatch
+decisions, graph scale) is written to the repo-root BENCH_pipeline.json
+(schema: benchmarks/common.validate_rollup; docs/BENCHMARKS.md). The default
+scale is `small` — the CI-sized run (common.py). Roofline terms come from
+the dry-run (launch/dryrun.py), not here.
+
+`dispatch_policy` runs first on purpose: it tunes and installs the dispatch
+policy cache, so every later suite (and the recorded phase breakdown) runs
+under measured routing rather than the untuned fallback.
 """
 from __future__ import annotations
 
@@ -12,7 +20,10 @@ import sys
 import time
 import traceback
 
+from benchmarks import common
+
 SUITES = [
+    ("dispatch_policy", "beyond-paper: autotune packed/unpacked + kernel modes"),
     ("strong_scaling", "Fig 5: phase breakdown + per-shard balance"),
     ("edge_elimination", "Fig 6a: edge elimination ablation"),
     ("work_aggregation", "Fig 6b: TDS token dedup ablation"),
@@ -27,12 +38,20 @@ SUITES = [
 ]
 
 
-def main():
+def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", default="medium", choices=["small", "medium", "large"])
+    ap.add_argument("--scale", default="small",
+                    choices=["small", "medium", "large"])
     ap.add_argument("--only", default=None)
-    args = ap.parse_args()
+    ap.add_argument("--no-rollup", action="store_true",
+                    help="skip writing the repo-root BENCH_pipeline.json")
+    args = ap.parse_args(argv)
+    known = [name for name, _ in SUITES]
+    if args.only and args.only not in known:
+        ap.error(f"--only {args.only!r} matches no suite; known: {known}")
 
+    suites = {}
+    payloads = {}
     failures = []
     for name, desc in SUITES:
         if args.only and name != args.only:
@@ -40,12 +59,27 @@ def main():
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
         try:
-            mod.run(args.scale)
-            print(f"[ok]   {name:24s} {desc} ({time.perf_counter()-t0:.1f}s)")
+            payloads[name] = mod.run(args.scale)
+            secs = time.perf_counter() - t0
+            suites[name] = {"seconds": secs, "ok": True, "description": desc}
+            print(f"[ok]   {name:24s} {desc} ({secs:.1f}s)")
         except Exception as e:
+            secs = time.perf_counter() - t0
+            suites[name] = {"seconds": secs, "ok": False, "description": desc,
+                            "error": repr(e)}
             failures.append((name, repr(e)))
             print(f"[FAIL] {name:24s} {e}")
             traceback.print_exc()
+
+    if suites and not args.no_rollup:
+        dp = payloads.get("dispatch_policy", {})
+        path = common.write_rollup(
+            suites, args.scale,
+            graph=dp.get("graph"),
+            phases=dp.get("phase_breakdown"),
+        )
+        print(f"roll-up -> {path}")
+
     print(f"\n{len(failures)} benchmark failures")
     sys.exit(1 if failures else 0)
 

@@ -186,6 +186,46 @@ def lcc_fixpoint(
         lambda st: lcc_iteration(dg, tdev, st), state, max_iters, stats)
 
 
+LCC_ROUTE = "prune.lcc"
+
+
+def lcc_route_bucket(state: PruneState, dg: DeviceGraph):
+    """Shape bucket for the packed-vs-unpacked LCC routing decision: vertex
+    count and arc count dominate the sweep cost (the packed width is ~1 word
+    for every template since n0 <= 64)."""
+    from repro.kernels import registry
+    return registry.shape_bucket(state.omega.shape[0], dg.m)
+
+
+def lcc_resolved_route(
+    state: PruneState,
+    dg: DeviceGraph,
+    tdev: TemplateDev,
+    blocked,
+    *,
+    collect_stats: bool = False,
+    force_pallas: bool = False,
+) -> str:
+    """The packed-vs-unpacked route the LCC fixpoint will actually take — the
+    single source of truth for both execution (`lcc_fixpoint_packed`) and
+    reporting (`prune`'s stats["dispatch_routes"]). Capability gates come
+    first (no blocked structure, per-iteration message counting, or
+    multiplicity counts force the boolean planes); within the packed-capable
+    envelope force_pallas pins packed (parity tests) and otherwise the tuned
+    policy decides, defaulting to packed — a caller passing `blocked` opted
+    in, matching the pre-policy behavior."""
+    from repro.kernels import registry
+
+    if blocked is None or collect_stats or tdev.needs_counts:
+        return registry.ROUTE_UNPACKED
+    if force_pallas:
+        return registry.ROUTE_PACKED
+    return registry.resolve_route(
+        LCC_ROUTE, lcc_route_bucket(state, dg),
+        default=registry.ROUTE_PACKED,
+        allowed=(registry.ROUTE_PACKED, registry.ROUTE_UNPACKED))
+
+
 def lcc_fixpoint_packed(
     dg: DeviceGraph,
     tdev: TemplateDev,
@@ -198,10 +238,19 @@ def lcc_fixpoint_packed(
     """LCC fixpoint through the packed-word sweep (the bitset_spmm kernel via
     the registry dispatch on TPU, its oracle elsewhere).
 
-    Degrades to the boolean-plane `lcc_fixpoint` when no blocked structure is
-    given or the template needs same-label multiplicity counts (the OR kernel
-    carries no counts)."""
-    if blocked is None or tdev.needs_counts:
+    Degrades to the boolean-plane `lcc_fixpoint` when `lcc_resolved_route`
+    says so: no blocked structure, same-label multiplicity counts (the OR
+    kernel carries no counts), or the tuned dispatch policy routing this
+    shape bucket to the unpacked sweep. `force_pallas` pins the packed
+    kernel path for parity tests."""
+    from repro.kernels import registry
+
+    route = lcc_resolved_route(
+        state, dg, tdev, blocked, force_pallas=force_pallas)
+    if route == registry.ROUTE_UNPACKED:
+        if stats is not None and blocked is not None and not tdev.needs_counts:
+            stats["lcc_routed_unpacked"] = stats.get(
+                "lcc_routed_unpacked", 0) + 1
         return lcc_fixpoint(dg, tdev, state, max_iters, stats)
     return _fixpoint(
         lambda st: lcc_iteration_packed(

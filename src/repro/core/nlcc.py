@@ -50,6 +50,48 @@ def _frontier_hop(
 import functools
 
 
+NLCC_ROUTE = "prune.nlcc"
+
+
+def nlcc_route_bucket(state: PruneState, wave: int):
+    """Shape bucket for packed-vs-unpacked NLCC wave routing: vertex count and
+    wave width drive the per-hop cost (each hop moves n x wave frontier bits —
+    wave/32 packed words per vertex)."""
+    from repro.kernels import registry
+    return registry.shape_bucket(state.omega.shape[0], wave)
+
+
+def nlcc_resolved_route(
+    state: PruneState,
+    wave: int,
+    blocked,
+    *,
+    count_messages: bool = False,
+    force_pallas: bool = False,
+) -> str:
+    """The packed-vs-unpacked route CC/PC waves will actually take — the
+    single source of truth for both execution (`verify_constraint`) and
+    reporting (`prune`'s stats["dispatch_routes"]). Packed waves need a
+    blocked structure, a word-aligned wave, and no message counting (the
+    packed OR absorbs duplicates before they can be counted); within that
+    envelope force_pallas pins packed (parity tests) and otherwise the tuned
+    policy decides, defaulting to the old hardcoded choice — packed on TPU
+    where the kernel compiles, boolean planes elsewhere (off-TPU the packed
+    hop is the same survivors with extra pack/unpack per hop)."""
+    from repro.kernels import compat, registry
+
+    if blocked is None or count_messages or wave % 32 != 0:
+        return registry.ROUTE_UNPACKED
+    if force_pallas:
+        return registry.ROUTE_PACKED
+    untuned = (
+        registry.ROUTE_PACKED if compat.on_tpu() else registry.ROUTE_UNPACKED
+    )
+    return registry.resolve_route(
+        NLCC_ROUTE, nlcc_route_bucket(state, wave), default=untuned,
+        allowed=(registry.ROUTE_PACKED, registry.ROUTE_UNPACKED))
+
+
 def check_walk_constraint_packed(
     dg: DeviceGraph,
     state: PruneState,
@@ -238,6 +280,12 @@ def verify_constraint(
     else:
         walks = [constraint.walk, tuple(reversed(constraint.walk))]
 
+    from repro.kernels import registry as _registry
+
+    use_packed = nlcc_resolved_route(
+        state, wave, blocked,
+        count_messages=count_messages, force_pallas=force_pallas,
+    ) == _registry.ROUTE_PACKED
     omega = state.omega
     for walk in walks:
         q0 = walk[0]
@@ -246,15 +294,6 @@ def verify_constraint(
         if sources.size == 0:
             continue
         keep = np.zeros(omega.shape[0], dtype=bool)
-        # packed waves only where the kernel actually runs (TPU, or pinned
-        # with force_pallas): off-TPU the packed hop is the same survivors
-        # with extra pack/unpack per hop and no single-jit wave
-        from repro.kernels import compat as _compat
-
-        use_packed = (
-            blocked is not None and not count_messages and wave % 32 == 0
-            and (force_pallas or _compat.on_tpu())
-        )
         for off in range(0, sources.size, wave):
             ids = sources[off : off + wave]
             pad = wave - ids.size
@@ -278,6 +317,8 @@ def verify_constraint(
             if stats is not None:
                 stats["nlcc_messages"] = stats.get("nlcc_messages", 0) + int(n_msgs)
                 stats["nlcc_tokens"] = stats.get("nlcc_tokens", 0) + int(ids.size)
+                wkey = "nlcc_packed_waves" if use_packed else "nlcc_plane_waves"
+                stats[wkey] = stats.get(wkey, 0) + 1
         # remove q0 candidacy from failing sources (Alg. 5 line 8)
         fail = np.asarray(omega[:, q0]) & ~keep
         omega = omega.at[:, q0].set(omega[:, q0] & jnp.asarray(~fail))

@@ -99,10 +99,15 @@ def prune(
     blocked=None,
     force_pallas: bool = False,
 ) -> PruneResult:
-    """`blocked` (a graph.blocked.BlockedStructure) routes every LCC sweep and
-    eligible NLCC frontier hop through the packed bitset kernel via the
-    registry dispatch — compiled on TPU, reference oracle elsewhere;
-    `force_pallas` pins the interpret-mode kernel path for parity testing."""
+    """`blocked` (a graph.blocked.BlockedStructure) makes every LCC sweep and
+    eligible NLCC frontier hop *packed-capable*: the tuned dispatch policy
+    (repro.kernels.registry, `registry.tune()` / the persisted policy cache)
+    then decides packed vs unpacked per shape bucket, and the kernel registry
+    decides pallas / interpret / ref per call. Untuned, the routing matches
+    the historical hardcoded choice (LCC: packed whenever `blocked` is given;
+    NLCC: packed only where the kernel compiles, i.e. on TPU). The routes
+    actually taken land in `stats["dispatch_routes"]`. `force_pallas` pins
+    the packed interpret-mode kernel path for parity testing."""
     if isinstance(graph, Graph):
         if label_freq is None:
             label_freq = graph.label_frequency()
@@ -116,6 +121,27 @@ def prune(
     state = initial_state if initial_state is not None else init_state(dg, template)
     if template.n0 == 1:
         return PruneResult(state, template, dg, phases, stats)
+
+    if blocked is not None:
+        # record the packed-vs-unpacked routing the sweeps below will actually
+        # take — same helpers, same gates (benchmarks surface this in the
+        # BENCH_pipeline.json roll-up)
+        from repro.kernels import registry as _registry
+        from repro.core.lcc import LCC_ROUTE, lcc_resolved_route
+        from repro.core.nlcc import NLCC_ROUTE, nlcc_resolved_route
+
+        stats["dispatch_routes"] = {
+            # the Fig-6a ablation (_lcc_no_edge_elim) never reaches the
+            # packed path, whatever the policy says
+            LCC_ROUTE: (_registry.ROUTE_UNPACKED if not edge_elimination
+                        else lcc_resolved_route(
+                state, dg, tdev, blocked,
+                collect_stats=collect_stats, force_pallas=force_pallas)),
+            NLCC_ROUTE: nlcc_resolved_route(
+                state, wave, blocked,
+                count_messages=collect_stats, force_pallas=force_pallas),
+        }
+        stats["dispatch_policy_active"] = _registry.get_policy() is not None
 
     # --- initial LCC
     t0 = time.perf_counter()
@@ -169,8 +195,6 @@ def prune(
                          blocked=blocked, force_pallas=force_pallas)
             phases.append(_snapshot(state, "LCC", None, time.perf_counter() - t0, {}))
 
-    for k, v in stats.items():
-        stats[k] = v
     return PruneResult(state, template, dg, phases, stats)
 
 

@@ -61,6 +61,12 @@ registry.register(
     eligible=lambda vals, dg_src, dg_dst, n, edge_active, blocked: (
         blocked is not None
     ),
+    # tuned decisions are shared per (vertex-count, packed-width) bucket: the
+    # LCC sweep (W = ceil(n0/32)) and the NLCC wave hop (W = wave/32) land in
+    # different buckets and may legitimately pick different modes
+    bucket=lambda vals, dg_src, dg_dst, n, edge_active, blocked: (
+        registry.shape_bucket(n) + (int(vals.shape[-1]),)
+    ),
     doc="blocked bit-packed OR-SpMM (LCC/NLCC edge sweep)",
 )
 

@@ -1,6 +1,7 @@
-"""Declarative kernel registry — one `dispatch()` for every Pallas kernel.
+"""Declarative kernel registry — one `dispatch()` for every Pallas kernel,
+plus the benchmark-driven dispatch policy that tunes its decisions.
 
-Each kernel registers three things:
+Each kernel registers four things:
 
   pallas_fn   the Pallas entrypoint, called as pallas_fn(*args, interpret=…, **kw)
   ref_fn      the pure-jnp oracle from ref.py with the same call signature
@@ -8,6 +9,9 @@ Each kernel registers three things:
   eligible    a shape-eligibility predicate over the same arguments: False
               means the Pallas formulation cannot express this call (missing
               blocked structure, tile-misaligned shapes, d_qk != d_v, …)
+  bucket      a shape-bucketing function over the same arguments: calls in the
+              same bucket share one tuned dispatch decision (default: a single
+              bucket per kernel)
 
 `dispatch(name, *args, force_pallas=…, backend=…, **kw)` then picks exactly
 one of three modes (`resolve_mode` exposes the decision for tests):
@@ -21,12 +25,33 @@ one of three modes (`resolve_mode` exposes the decision for tests):
 A Pallas attempt that dies with an API-drift error (compat.PALLAS_TRAP_ERRORS)
 is trapped and re-run through the reference oracle — unless force_pallas was
 set, in which case the error propagates so parity tests stay strict.
+
+Dispatch policy
+---------------
+
+On top of the eligibility rules sits a measured-cost policy (`DispatchPolicy`):
+a per-(kernel, backend, shape-bucket) table of tuned decisions, produced by
+`tune()` (which times every candidate variant on the live backend) and
+persisted to a JSON cache (`policy_path()`, overridable via the
+``REPRO_DISPATCH_POLICY`` env var). `resolve_mode` consults the active policy
+first; with no policy (or no entry for the bucket) it falls back to the
+eligibility/trap behavior above, so an untuned checkout behaves exactly like
+the pre-policy registry. `force_pallas` always bypasses the policy — parity
+tests pin the kernel path.
+
+The policy also stores *route* decisions for choices that live above a single
+kernel call — today the packed-vs-unpacked `prune` routing (route names
+``prune.lcc`` and ``prune.nlcc``, see core/lcc.py and core/nlcc.py), which
+`resolve_route` serves to the hot loops.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
+import time
 import warnings
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
 
 import jax
 
@@ -35,10 +60,21 @@ from repro.kernels import compat
 MODE_PALLAS = "pallas"
 MODE_INTERPRET = "interpret"
 MODE_REF = "ref"
+MODES = (MODE_PALLAS, MODE_INTERPRET, MODE_REF)
+
+ROUTE_PACKED = "packed"
+ROUTE_UNPACKED = "unpacked"
+
+# wildcard bucket: one decision for every shape of a (kernel, backend) pair
+BUCKET_ANY = "*"
 
 
 def _always_eligible(*args, **kwargs) -> bool:
     return True
+
+
+def _single_bucket(*args, **kwargs) -> Tuple:
+    return ()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +83,7 @@ class KernelSpec:
     pallas_fn: Callable[..., Any]
     ref_fn: Callable[..., Any]
     eligible: Callable[..., bool]
+    bucket: Callable[..., Tuple] = _single_bucket
     doc: str = ""
 
 
@@ -59,11 +96,12 @@ def register(
     pallas: Callable[..., Any],
     ref: Callable[..., Any],
     eligible: Callable[..., bool] = _always_eligible,
+    bucket: Callable[..., Tuple] = _single_bucket,
     doc: str = "",
 ) -> KernelSpec:
     """Register (or re-register) a kernel under `name`."""
     spec = KernelSpec(name=name, pallas_fn=pallas, ref_fn=ref,
-                      eligible=eligible, doc=doc)
+                      eligible=eligible, bucket=bucket, doc=doc)
     _REGISTRY[name] = spec
     return spec
 
@@ -81,6 +119,187 @@ def names() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+# ------------------------------------------------------------------ buckets
+def shape_bucket(*dims: int) -> Tuple[int, ...]:
+    """Round each dimension up to the next power of two. Calls whose dims land
+    in the same bucket share one tuned decision — the autotuner measures one
+    representative per bucket, not every exact shape."""
+    out = []
+    for d in dims:
+        d = max(int(d), 1)
+        b = 1
+        while b < d:
+            b <<= 1
+        out.append(b)
+    return tuple(out)
+
+
+def _bucket_key(bucket) -> str:
+    if bucket == BUCKET_ANY:
+        return BUCKET_ANY
+    return "x".join(str(b) for b in tuple(bucket)) or "scalar"
+
+
+def _entry_key(name: str, backend: str, bucket) -> str:
+    return f"{name}|{backend}|{_bucket_key(bucket)}"
+
+
+# ------------------------------------------------------------------- policy
+@dataclasses.dataclass
+class PolicyEntry:
+    """One tuned decision: the winning variant plus the measurements behind
+    it (candidate -> best wall seconds over the tuning repeats)."""
+
+    choice: str
+    measured_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def to_json(self) -> Dict:
+        return {"choice": self.choice, "measured_s": self.measured_s}
+
+    @staticmethod
+    def from_json(d: Dict) -> "PolicyEntry":
+        return PolicyEntry(
+            choice=str(d["choice"]),
+            measured_s={k: float(v) for k, v in d.get("measured_s", {}).items()},
+        )
+
+
+POLICY_SCHEMA_VERSION = 1
+
+
+@dataclasses.dataclass
+class DispatchPolicy:
+    """Measured-cost dispatch table, keyed "<name>|<backend>|<bucket>".
+
+    `modes` holds per-kernel mode decisions ("pallas"/"interpret"/"ref");
+    `routes` holds above-kernel routing decisions ("packed"/"unpacked").
+    Lookup tries the exact bucket first, then the ``*`` wildcard bucket.
+    """
+
+    modes: Dict[str, PolicyEntry] = dataclasses.field(default_factory=dict)
+    routes: Dict[str, PolicyEntry] = dataclasses.field(default_factory=dict)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    # -- lookup
+    def _lookup(self, table: Dict[str, PolicyEntry], name, backend, bucket):
+        entry = table.get(_entry_key(name, backend, bucket))
+        if entry is None and bucket != BUCKET_ANY:
+            entry = table.get(_entry_key(name, backend, BUCKET_ANY))
+        return entry
+
+    def mode_for(self, name: str, backend: str, bucket) -> Optional[str]:
+        entry = self._lookup(self.modes, name, backend, bucket)
+        return entry.choice if entry is not None else None
+
+    def route_for(self, name: str, backend: str, bucket) -> Optional[str]:
+        entry = self._lookup(self.routes, name, backend, bucket)
+        return entry.choice if entry is not None else None
+
+    # -- mutation
+    def set_mode(self, name: str, backend: str, bucket, choice: str,
+                 measured_s: Optional[Dict[str, float]] = None):
+        if choice not in MODES:
+            raise ValueError(f"unknown mode {choice!r}; expected one of {MODES}")
+        self.modes[_entry_key(name, backend, bucket)] = PolicyEntry(
+            choice, dict(measured_s or {}))
+
+    def set_route(self, name: str, backend: str, bucket, choice: str,
+                  measured_s: Optional[Dict[str, float]] = None):
+        self.routes[_entry_key(name, backend, bucket)] = PolicyEntry(
+            choice, dict(measured_s or {}))
+
+    # -- persistence
+    def to_json(self) -> Dict:
+        return {
+            "schema_version": POLICY_SCHEMA_VERSION,
+            "meta": self.meta,
+            "modes": {k: e.to_json() for k, e in sorted(self.modes.items())},
+            "routes": {k: e.to_json() for k, e in sorted(self.routes.items())},
+        }
+
+    @staticmethod
+    def from_json(d: Dict) -> "DispatchPolicy":
+        ver = d.get("schema_version")
+        if ver != POLICY_SCHEMA_VERSION:
+            raise ValueError(
+                f"dispatch policy schema_version {ver!r} != "
+                f"{POLICY_SCHEMA_VERSION}; re-run registry.tune()"
+            )
+        return DispatchPolicy(
+            modes={k: PolicyEntry.from_json(e) for k, e in d.get("modes", {}).items()},
+            routes={k: PolicyEntry.from_json(e) for k, e in d.get("routes", {}).items()},
+            meta=dict(d.get("meta", {})),
+        )
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or policy_path()
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f, indent=1, sort_keys=True)
+        return path
+
+    @staticmethod
+    def load(path: Optional[str] = None) -> "DispatchPolicy":
+        path = path or policy_path()
+        with open(path) as f:
+            return DispatchPolicy.from_json(json.load(f))
+
+
+DEFAULT_POLICY_PATH = os.path.join("experiments", "policy", "dispatch_policy.json")
+
+
+def policy_path() -> str:
+    """Where the persisted policy cache lives (env REPRO_DISPATCH_POLICY wins)."""
+    return os.environ.get("REPRO_DISPATCH_POLICY", DEFAULT_POLICY_PATH)
+
+
+_POLICY_UNSET = object()
+_POLICY: Any = _POLICY_UNSET
+
+
+def set_policy(policy: Optional[DispatchPolicy]) -> None:
+    """Install `policy` as the active dispatch policy (None = explicitly no
+    policy: pure eligibility/trap fallback, no lazy cache load)."""
+    global _POLICY
+    _POLICY = policy
+
+
+def clear_policy() -> None:
+    """Forget the active policy; the next lookup lazily re-reads the cache."""
+    global _POLICY
+    _POLICY = _POLICY_UNSET
+
+
+def get_policy() -> Optional[DispatchPolicy]:
+    """The active policy: whatever `set_policy` installed, else the persisted
+    cache at `policy_path()` if one exists (loaded once), else None."""
+    global _POLICY
+    if _POLICY is _POLICY_UNSET:
+        path = policy_path()
+        if os.path.exists(path):
+            try:
+                _POLICY = DispatchPolicy.load(path)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError) as e:
+                warnings.warn(
+                    f"ignoring unreadable dispatch policy cache {path!r}: {e}",
+                    RuntimeWarning, stacklevel=2,
+                )
+                _POLICY = None
+        else:
+            _POLICY = None
+    return _POLICY
+
+
+def _modes_runnable(backend: str) -> Tuple[str, ...]:
+    """Modes that can actually execute on `backend` (for an eligible call)."""
+    if backend == "tpu":
+        return (MODE_PALLAS, MODE_INTERPRET, MODE_REF)
+    return (MODE_INTERPRET, MODE_REF)
+
+
+# ----------------------------------------------------------------- routing
 def resolve_mode(
     name: str,
     *args,
@@ -88,15 +307,50 @@ def resolve_mode(
     backend: Optional[str] = None,
     **kwargs,
 ) -> str:
-    """The routing decision `dispatch` will take, without executing anything."""
+    """The routing decision `dispatch` will take, without executing anything.
+
+    Order: eligibility (a shape the kernel cannot express is always "ref"),
+    then the tuned policy for this (kernel, backend, bucket) — skipped under
+    force_pallas, which pins the kernel path for parity tests — then the
+    untuned fallback (TPU -> pallas, forced -> interpret, else ref)."""
     spec = get(name)
     if not spec.eligible(*args, **kwargs):
         return MODE_REF
-    if (backend or jax.default_backend()) == "tpu":
+    be = backend or jax.default_backend()
+    if not force_pallas:
+        policy = get_policy()
+        if policy is not None:
+            choice = policy.mode_for(name, be, spec.bucket(*args, **kwargs))
+            if choice is not None and choice in _modes_runnable(be):
+                return choice
+    if be == "tpu":
         return MODE_PALLAS
     if force_pallas:
         return MODE_INTERPRET
     return MODE_REF
+
+
+def resolve_route(
+    name: str,
+    bucket=BUCKET_ANY,
+    *,
+    default: str,
+    backend: Optional[str] = None,
+    allowed: Optional[Sequence[str]] = None,
+) -> str:
+    """Above-kernel routing decision (e.g. packed vs unpacked `prune` paths):
+    the tuned policy's choice for (name, backend, bucket) when one exists,
+    else `default` — which callers set to today's hardcoded behavior, so an
+    untuned checkout routes exactly as before. With `allowed` set, a cache
+    entry outside it (hand-edited typo, stale candidate name) falls back to
+    `default` deterministically instead of leaking into comparisons."""
+    be = backend or jax.default_backend()
+    policy = get_policy()
+    if policy is not None:
+        choice = policy.route_for(name, be, bucket)
+        if choice is not None and (allowed is None or choice in allowed):
+            return choice
+    return default
 
 
 def dispatch(
@@ -125,3 +379,102 @@ def dispatch(
             stacklevel=2,
         )
         return spec.ref_fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------- autotune
+def _time_thunk(thunk: Callable[[], Any], repeat: int) -> float:
+    """Best wall-time over `repeat` runs, after one warmup (compile) run;
+    device work is synchronized out via block_until_ready."""
+
+    def run_once():
+        out = thunk()
+        try:
+            jax.block_until_ready(out)
+        except TypeError:  # non-array output (host dict / python scalar)
+            pass
+        return out
+
+    run_once()
+    best = float("inf")
+    for _ in range(max(repeat, 1)):
+        t0 = time.perf_counter()
+        run_once()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _mode_thunk(spec: KernelSpec, mode: str, args, kwargs) -> Callable[[], Any]:
+    if mode == MODE_REF:
+        return lambda: spec.ref_fn(*args, **kwargs)
+    return lambda: spec.pallas_fn(
+        *args, interpret=(mode == MODE_INTERPRET), **kwargs)
+
+
+def tune(
+    cases: Iterable[Tuple[str, Sequence[Any], Dict[str, Any]]] = (),
+    routes: Iterable[Tuple[str, Any, Dict[str, Callable[[], Any]]]] = (),
+    *,
+    repeat: int = 3,
+    policy: Optional[DispatchPolicy] = None,
+    path: Optional[str] = None,
+    persist: bool = True,
+    backend: Optional[str] = None,
+) -> DispatchPolicy:
+    """Microbenchmark autotuner: measure every runnable variant on the live
+    backend and record the winners in a `DispatchPolicy`.
+
+    cases   iterable of (kernel_name, args, kwargs): for each, every mode that
+            can run here (ref everywhere; interpret when eligible; compiled
+            pallas only on TPU) is timed and the fastest becomes the decision
+            for that call's shape bucket.
+    routes  iterable of (route_name, bucket, {candidate: thunk}): each thunk
+            is timed as-is; the fastest candidate becomes the route decision
+            (e.g. "packed"/"unpacked" prune routing).
+    repeat  timing repeats per candidate (best-of, after a warmup run).
+    policy  extend this policy instead of starting fresh.
+    path/persist  where (and whether) to save the JSON cache; the tuned
+            policy is installed as the active one either way.
+
+    An interpret-mode candidate that traps on API drift is recorded as
+    unrunnable (inf) rather than aborting the tune.
+    """
+    be = backend or jax.default_backend()
+    pol = policy if policy is not None else DispatchPolicy()
+    pol.meta.update({
+        "backend": be,
+        "jax": jax.__version__,
+        "repeat": int(repeat),
+        "tuned_unix": time.time(),
+    })
+
+    for name, args, kwargs in cases:
+        spec = get(name)
+        if not spec.eligible(*args, **kwargs):
+            continue  # ineligible shapes are always "ref"; nothing to decide
+        bucket = spec.bucket(*args, **kwargs)
+        measured: Dict[str, float] = {}
+        for mode in _modes_runnable(be):
+            try:
+                measured[mode] = _time_thunk(
+                    _mode_thunk(spec, mode, args, kwargs), repeat)
+            except compat.PALLAS_TRAP_ERRORS:
+                measured[mode] = float("inf")
+        winner = min(measured, key=measured.get)
+        pol.set_mode(name, be, bucket, winner, measured)
+
+    # install the tuned kernel modes BEFORE timing routes: route thunks go
+    # through dispatch(), so packed-vs-unpacked must be measured under the
+    # kernel modes that will actually serve the winning route
+    set_policy(pol)
+
+    for name, bucket, candidates in routes:
+        measured = {}
+        for cand, thunk in candidates.items():
+            measured[cand] = _time_thunk(thunk, repeat)
+        winner = min(measured, key=measured.get)
+        pol.set_route(name, be, bucket, winner, measured)
+
+    if persist:
+        pol.save(path)
+    set_policy(pol)
+    return pol

@@ -3,6 +3,11 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-15b \
       --batch 4 --prompt-len 16 --max-new 32
+
+Kernel calls in the serving hot loop (attention, embedding_bag) route through
+the dispatch registry; `--policy` loads a tuned dispatch-policy cache (from
+`registry.tune()` / `python -m benchmarks.run`) so serving uses the measured
+kernel-mode decisions for this host instead of the untuned fallback.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_arch
 from repro.configs.base import LMConfig, RecsysConfig
+from repro.kernels import registry
 from repro.models import transformer, bert4rec
 from repro import serve as serve_lib
 from repro.data import MaskedSequenceStream
@@ -25,7 +31,15 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--policy", default=None, metavar="PATH",
+                    help="dispatch-policy cache to serve under "
+                         "(default: the registry's lazy policy_path() load)")
     args = ap.parse_args()
+
+    if args.policy:
+        registry.set_policy(registry.DispatchPolicy.load(args.policy))
+        print(f"dispatch policy: {args.policy} "
+              f"({len(registry.get_policy().modes)} tuned kernel modes)")
 
     cfg = get_arch(args.arch).smoke()
     if isinstance(cfg, LMConfig):

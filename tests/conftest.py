@@ -44,3 +44,17 @@ def sample_template_from(g: Graph, size: int, seed: int, extra_edge_p: float = 0
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_dispatch_policy(tmp_path, monkeypatch):
+    """Keep tier-1 hermetic w.r.t. any tuned dispatch-policy cache in the
+    workspace: every test sees an empty per-test cache path and starts from
+    the untuned eligibility fallback (tests install policies explicitly)."""
+    from repro.kernels import registry
+
+    monkeypatch.setenv(
+        "REPRO_DISPATCH_POLICY", str(tmp_path / "dispatch_policy.json"))
+    registry.clear_policy()
+    yield
+    registry.clear_policy()

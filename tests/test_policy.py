@@ -1,0 +1,359 @@
+"""Dispatch-policy contract (CPU-runnable):
+
+  - cache round-trip: persist -> reload -> identical table and identical
+    `resolve_mode` decisions, including the lazy load from the persisted
+    cache path,
+  - untuned fallback: with no policy, `resolve_mode` behaves exactly like
+    the pre-policy registry (eligibility -> backend -> force_pallas),
+  - policy safety: ineligible shapes stay "ref", a tuned mode the backend
+    cannot run is ignored, force_pallas bypasses the policy,
+  - routing: packed/unpacked `prune` routing follows an injected policy and
+    yields identical pruning results either way,
+  - tune(): measures every runnable candidate, picks the argmin, persists,
+  - roll-up: BENCH_pipeline.json schema is stable (validate_rollup).
+"""
+import json
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from benchmarks import common as bench_common
+from repro.core import Template, prune
+from repro.core.lcc import LCC_ROUTE
+from repro.core.nlcc import NLCC_ROUTE
+from repro.graph import generators as gen
+from repro.graph.blocked import build_blocked_structure
+from repro.graph.structs import DeviceGraph
+from repro.kernels import registry
+
+
+def _graph_args(scale=6, w=2, bn=64):
+    g = gen.rmat_graph(scale, edge_factor=4, seed=scale)
+    dg = DeviceGraph.from_host(g)
+    r = np.random.default_rng(scale)
+    vals = jnp.asarray(r.integers(0, 2**32, size=(g.n, w), dtype=np.uint32))
+    active = jnp.asarray(r.random(dg.m) < 0.7)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=bn)
+    return (vals, dg.src, dg.dst, g.n, active, bs)
+
+
+def _bitset_bucket(args):
+    return registry.get("bitset_spmm").bucket(*args)
+
+
+def _prune_setup():
+    g = gen.erdos_renyi_graph(100, 5.0, seed=3, n_labels=3)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    dg = DeviceGraph.from_host(g)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst),
+                                 g.n, bn=64)
+    return g, tmpl, bs
+
+
+# ------------------------------------------------------------- round-trip
+def test_policy_cache_roundtrip(tmp_path):
+    args = _graph_args()
+    bucket = _bitset_bucket(args)
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", bucket, registry.MODE_INTERPRET,
+                 {"interpret": 0.001, "ref": 0.002})
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                  registry.ROUTE_UNPACKED, {"packed": 0.2, "unpacked": 0.1})
+    path = pol.save(str(tmp_path / "pol.json"))
+
+    reloaded = registry.DispatchPolicy.load(path)
+    assert reloaded.to_json() == pol.to_json()
+
+    registry.set_policy(reloaded)
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_INTERPRET
+    assert registry.resolve_route(
+        LCC_ROUTE, (1, 2), default=registry.ROUTE_PACKED,
+        backend="cpu") == registry.ROUTE_UNPACKED
+
+
+def test_resolve_mode_lazily_loads_persisted_cache(tmp_path, monkeypatch):
+    """The acceptance contract: a persisted cache at policy_path() is honored
+    without any explicit set_policy call."""
+    args = _graph_args()
+    path = str(tmp_path / "cache.json")
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", _bitset_bucket(args),
+                 registry.MODE_INTERPRET)
+    pol.save(path)
+
+    monkeypatch.setenv("REPRO_DISPATCH_POLICY", path)
+    registry.clear_policy()
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_INTERPRET
+    # ...and the same call with no cache file falls back to "ref"
+    monkeypatch.setenv("REPRO_DISPATCH_POLICY", str(tmp_path / "absent.json"))
+    registry.clear_policy()
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_REF
+
+
+def test_unreadable_cache_warns_and_falls_back(tmp_path, monkeypatch):
+    path = tmp_path / "broken.json"
+    path.write_text('{"schema_version": 999}')
+    monkeypatch.setenv("REPRO_DISPATCH_POLICY", str(path))
+    registry.clear_policy()
+    args = _graph_args()
+    with pytest.warns(RuntimeWarning, match="unreadable dispatch policy"):
+        mode = registry.resolve_mode("bitset_spmm", *args, backend="cpu")
+    assert mode == registry.MODE_REF
+
+
+def test_unopenable_cache_path_warns_and_falls_back(tmp_path, monkeypatch):
+    # exists() is True but open() raises OSError (here: a directory; in the
+    # field: a root-owned cache in CI) — dispatch must warn and run untuned
+    monkeypatch.setenv("REPRO_DISPATCH_POLICY", str(tmp_path))
+    registry.clear_policy()
+    args = _graph_args()
+    with pytest.warns(RuntimeWarning, match="unreadable dispatch policy"):
+        mode = registry.resolve_mode("bitset_spmm", *args, backend="cpu")
+    assert mode == registry.MODE_REF
+
+
+def test_unknown_route_value_falls_back_to_default_everywhere():
+    # a hand-edited cache with a typo'd route value must not split LCC and
+    # NLCC onto different interpretations — both fall back to their defaults
+    g, tmpl, bs = _prune_setup()
+    pol = registry.DispatchPolicy()
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY, "Packed-Typo")
+    pol.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY, "Packed-Typo")
+    registry.set_policy(pol)
+    res = prune(g, tmpl, blocked=bs)
+    assert res.stats["dispatch_routes"] == {
+        LCC_ROUTE: registry.ROUTE_PACKED,      # untuned default with blocked
+        NLCC_ROUTE: registry.ROUTE_UNPACKED,   # untuned default off-TPU
+    }
+
+
+# -------------------------------------------------------- untuned fallback
+def test_untuned_fallback_matches_legacy_registry_behavior():
+    args = _graph_args()
+    assert registry.get_policy() is None  # conftest isolates the cache path
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_REF
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu",
+        force_pallas=True) == registry.MODE_INTERPRET
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="tpu") == registry.MODE_PALLAS
+    ineligible = args[:5] + (None,)
+    assert registry.resolve_mode(
+        "bitset_spmm", *ineligible, backend="tpu") == registry.MODE_REF
+    assert registry.resolve_route(
+        LCC_ROUTE, (4, 4), default=registry.ROUTE_PACKED) == registry.ROUTE_PACKED
+
+
+def test_policy_never_overrides_eligibility():
+    args = _graph_args()
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY,
+                 registry.MODE_INTERPRET)
+    registry.set_policy(pol)
+    ineligible = args[:5] + (None,)  # no blocked structure
+    assert registry.resolve_mode(
+        "bitset_spmm", *ineligible, backend="cpu") == registry.MODE_REF
+
+
+def test_unrunnable_tuned_mode_falls_back():
+    # a policy tuned on TPU says "pallas"; on CPU that cannot execute, so the
+    # untuned fallback ("ref") wins rather than a guaranteed kernel failure
+    args = _graph_args()
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY, registry.MODE_PALLAS)
+    registry.set_policy(pol)
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_REF
+
+
+def test_force_pallas_bypasses_policy():
+    args = _graph_args()
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY, registry.MODE_REF)
+    registry.set_policy(pol)
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu",
+        force_pallas=True) == registry.MODE_INTERPRET
+
+
+def test_wildcard_bucket_matches_every_shape():
+    pol = registry.DispatchPolicy()
+    pol.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY,
+                 registry.MODE_INTERPRET)
+    registry.set_policy(pol)
+    for scale in (5, 6, 7):
+        args = _graph_args(scale=scale)
+        assert registry.resolve_mode(
+            "bitset_spmm", *args, backend="cpu") == registry.MODE_INTERPRET
+    # exact bucket beats the wildcard
+    args = _graph_args()
+    pol.set_mode("bitset_spmm", "cpu", _bitset_bucket(args), registry.MODE_REF)
+    assert registry.resolve_mode(
+        "bitset_spmm", *args, backend="cpu") == registry.MODE_REF
+
+
+# ------------------------------------------------------------ prune routing
+def test_prune_lcc_routing_follows_injected_policy():
+    g, tmpl, bs = _prune_setup()
+
+    registry.set_policy(None)
+    base = prune(g, tmpl, blocked=bs)
+    # untuned default: blocked was passed, so LCC routes packed
+    assert base.stats["dispatch_routes"][LCC_ROUTE] == registry.ROUTE_PACKED
+    assert base.stats.get("lcc_packed_calls", 0) > 0
+
+    pol = registry.DispatchPolicy()
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                  registry.ROUTE_UNPACKED)
+    registry.set_policy(pol)
+    routed = prune(g, tmpl, blocked=bs)
+    assert routed.stats["dispatch_routes"][LCC_ROUTE] == registry.ROUTE_UNPACKED
+    assert "lcc_packed_calls" not in routed.stats
+    assert routed.stats.get("lcc_routed_unpacked", 0) > 0
+
+    # routing is a performance choice, never a semantic one
+    np.testing.assert_array_equal(base.omega, routed.omega)
+    np.testing.assert_array_equal(base.edge_mask, routed.edge_mask)
+
+
+def test_prune_nlcc_routing_follows_injected_policy():
+    g, tmpl, bs = _prune_setup()
+
+    registry.set_policy(None)
+    base = prune(g, tmpl, blocked=bs)
+    # untuned default off-TPU: boolean-plane waves
+    assert base.stats["dispatch_routes"][NLCC_ROUTE] == registry.ROUTE_UNPACKED
+
+    pol = registry.DispatchPolicy()
+    pol.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                  registry.ROUTE_PACKED)
+    registry.set_policy(pol)
+    routed = prune(g, tmpl, blocked=bs)
+    assert routed.stats["dispatch_routes"][NLCC_ROUTE] == registry.ROUTE_PACKED
+    packed_waves = sum(
+        p.extra.get("nlcc_packed_waves", 0) for p in routed.phases)
+    plane_waves = sum(
+        p.extra.get("nlcc_plane_waves", 0) for p in routed.phases)
+    assert packed_waves > 0 and plane_waves == 0
+
+    np.testing.assert_array_equal(base.omega, routed.omega)
+    np.testing.assert_array_equal(base.edge_mask, routed.edge_mask)
+
+
+def test_dispatch_routes_report_the_route_actually_taken():
+    # capability gates (collect_stats forces message counting / per-iteration
+    # python loops) beat a packed-routed policy, and the stats must say so
+    g, tmpl, bs = _prune_setup()
+    pol = registry.DispatchPolicy()
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY, registry.ROUTE_PACKED)
+    pol.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY, registry.ROUTE_PACKED)
+    registry.set_policy(pol)
+
+    gated = prune(g, tmpl, blocked=bs, collect_stats=True)
+    assert gated.stats["dispatch_routes"] == {
+        LCC_ROUTE: registry.ROUTE_UNPACKED,
+        NLCC_ROUTE: registry.ROUTE_UNPACKED,
+    }
+    assert "lcc_packed_calls" not in gated.stats
+    assert not any(p.extra.get("nlcc_packed_waves") for p in gated.phases)
+
+    ungated = prune(g, tmpl, blocked=bs)
+    assert ungated.stats["dispatch_routes"] == {
+        LCC_ROUTE: registry.ROUTE_PACKED,
+        NLCC_ROUTE: registry.ROUTE_PACKED,
+    }
+    assert ungated.stats.get("lcc_packed_calls", 0) > 0
+
+    # the Fig-6a ablation path never runs the packed sweep
+    ablated = prune(g, tmpl, blocked=bs, edge_elimination=False)
+    assert ablated.stats["dispatch_routes"][LCC_ROUTE] == registry.ROUTE_UNPACKED
+    assert "lcc_packed_calls" not in ablated.stats
+
+
+# ------------------------------------------------------------------- tune
+def test_tune_measures_candidates_and_persists(tmp_path):
+    args = _graph_args()
+    path = str(tmp_path / "tuned.json")
+    calls = {"a": 0, "b": 0}
+
+    def cand_a():
+        calls["a"] += 1
+        return jnp.zeros(4)
+
+    def cand_b():
+        calls["b"] += 1
+        return jnp.zeros(4)
+
+    pol = registry.tune(
+        cases=[("bitset_spmm", args, {})],
+        routes=[("test.route", registry.BUCKET_ANY,
+                 {"a": cand_a, "b": cand_b})],
+        repeat=2, path=path,
+    )
+    bucket = _bitset_bucket(args)
+    entry = pol.modes[f"bitset_spmm|cpu|{registry._bucket_key(bucket)}"]
+    # on CPU both interpret and ref are runnable candidates; compiled pallas
+    # is not (TPU only)
+    assert set(entry.measured_s) == {registry.MODE_INTERPRET, registry.MODE_REF}
+    assert entry.choice == min(entry.measured_s, key=entry.measured_s.get)
+
+    rentry = pol.routes[f"test.route|cpu|{registry.BUCKET_ANY}"]
+    assert rentry.choice == min(rentry.measured_s, key=rentry.measured_s.get)
+    assert calls["a"] >= 3 and calls["b"] >= 3  # warmup + repeats
+
+    # persisted and installed as the active policy
+    assert registry.get_policy() is pol
+    assert registry.DispatchPolicy.load(path).to_json() == pol.to_json()
+
+
+# ----------------------------------------------------------------- roll-up
+def _minimal_rollup_suites():
+    return {"dispatch_policy": {"seconds": 1.5, "ok": True,
+                                "description": "autotune"}}
+
+
+def test_rollup_schema_roundtrip(tmp_path):
+    pol = registry.DispatchPolicy()
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY, registry.ROUTE_PACKED,
+                  {"packed": 0.1, "unpacked": 0.2})
+    registry.set_policy(pol)
+    path = bench_common.write_rollup(
+        _minimal_rollup_suites(), "small",
+        graph={"n": 2048, "m": 25316},
+        phases=[{"phase": "LCC", "seconds": 0.5}],
+        path=str(tmp_path / "BENCH_pipeline.json"),
+    )
+    payload = json.load(open(path))
+    bench_common.validate_rollup(payload)  # schema-stable after JSON round-trip
+    assert payload["schema_version"] == bench_common.ROLLUP_SCHEMA_VERSION
+    assert payload["scale"] == "small"
+    assert payload["graph"] == {"n": 2048, "m": 25316}
+    assert payload["suites"]["dispatch_policy"]["ok"] is True
+    route_key = f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}"
+    assert payload["policy"]["routes"][route_key]["choice"] == registry.ROUTE_PACKED
+
+
+@pytest.mark.parametrize("mutate,match", [
+    (lambda p: p.pop("suites"), "missing key 'suites'"),
+    (lambda p: p.pop("phases"), "missing key 'phases'"),
+    (lambda p: p.update(schema_version=99), "schema_version"),
+    (lambda p: p["suites"]["dispatch_policy"].pop("seconds"),
+     "missing key 'seconds'"),
+    (lambda p: p["phases"].append({"seconds": 1.0}), "missing key 'phase'"),
+])
+def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
+    registry.set_policy(None)
+    path = bench_common.write_rollup(
+        _minimal_rollup_suites(), "small",
+        phases=[{"phase": "LCC", "seconds": 0.5}],
+        path=str(tmp_path / "r.json"),
+    )
+    payload = json.load(open(path))
+    mutate(payload)
+    with pytest.raises(ValueError, match=match):
+        bench_common.validate_rollup(payload)
