@@ -122,6 +122,7 @@ def write_rollup(
     *,
     graph: Optional[Dict] = None,
     phases: Optional[List[Dict]] = None,
+    nlcc_wave: Optional[Dict] = None,
     path: Optional[str] = None,
 ) -> str:
     """Write the repo-root BENCH_pipeline.json perf-trajectory roll-up.
@@ -129,7 +130,10 @@ def write_rollup(
     suites  {suite_name: {"seconds": wall, "ok": bool, ...}} per-suite timings
     graph   {"n": ..., "m": ...} background-graph scale actually benchmarked
     phases  [{"phase": "LCC", "seconds": ...}, ...] pipeline phase breakdown
-    The tuned dispatch decisions (chosen kernel modes + packed/unpacked
+    nlcc_wave  {"choice": route, "measured_s": {route: seconds}} — the
+    measured NLCC wave time per route (the CI regression gate reads this;
+    additive, so older roll-ups without it stay schema-valid)
+    The tuned dispatch decisions (chosen kernel modes + packed/unpacked/fused
     routes) come from the active registry policy. Validates before writing.
     """
     import jax
@@ -146,6 +150,8 @@ def write_rollup(
         "phases": list(phases or []),
         "policy": policy.to_json() if policy is not None else {},
     }
+    if nlcc_wave:
+        payload["nlcc_wave"] = dict(nlcc_wave)
     validate_rollup(payload)
     out = path or rollup_path()
     with open(out, "w") as f:

@@ -4,10 +4,12 @@ fixpoint and decide the default").
 
 Sweeps, on the live backend:
   - kernel modes for `bitset_spmm` at the two shapes the pipeline actually
-    issues (LCC sweep width W = ceil(n0/32), NLCC wave width W = wave/32) —
+    issues (LCC sweep width W = ceil(n0/32), NLCC wave width W = wave/32) and
+    for the fused multi-hop `bitset_wave` at the NLCC wave shape —
     pallas-compiled on TPU, pallas-interpret, and the reference oracle,
-  - packed vs unpacked routing for the LCC fixpoint sweep and the NLCC
-    frontier hop over the WDC-like templates,
+  - routing for the LCC fixpoint sweep (packed vs unpacked) and the NLCC
+    wave (packed per-hop launches vs unpacked boolean planes vs the fused
+    wave engine) over the WDC-like templates,
 then persists the winners to the dispatch-policy cache
 (`registry.policy_path()`), and re-runs the full prune pipeline per template
 under the tuned policy to report the end-to-end phase breakdown the
@@ -27,8 +29,8 @@ import jax.numpy as jnp
 
 from repro.core.lcc import LCC_ROUTE, TemplateDev, lcc_iteration, lcc_iteration_packed, lcc_route_bucket
 from repro.core.nlcc import (
-    NLCC_ROUTE, check_walk_constraint, check_walk_constraint_packed,
-    nlcc_route_bucket,
+    NLCC_ROUTE, check_walk_constraint, check_walk_constraint_fused,
+    check_walk_constraint_packed, nlcc_route_bucket,
 )
 from repro.core.pipeline import prune
 from repro.core.state import init_state, pack_bits
@@ -75,13 +77,19 @@ def run(scale: str = "small") -> Dict:
     frontier = frontier.at[safe, jnp.arange(WAVE)].set(
         (ids >= 0) & jnp.take(cand[0], safe))
     nlcc_vals = pack_bits(frontier)  # uint32[n, WAVE/32]
+    # hop-indexed candidacy stack for the fused wave kernel case
+    nlcc_cand = jnp.where(cand[1:], jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
 
     cases = [
         ("bitset_spmm", (lcc_vals, dg.src, dg.dst, g.n, st.edge_active, bs), {}),
         ("bitset_spmm", (nlcc_vals, dg.src, dg.dst, g.n, st.edge_active, bs), {}),
+        ("bitset_wave",
+         (nlcc_vals, dg.src, dg.dst, g.n, st.edge_active, nlcc_cand, bs), {}),
     ]
 
-    # --- route cases: one LCC sweep / one NLCC wave, packed vs unpacked
+    # --- route cases: one LCC sweep / one NLCC wave. The NLCC wave races all
+    # three engines: per-hop packed launches, boolean-plane scan, fused kernel
+    nlcc_bucket = nlcc_route_bucket(st, WAVE)
     routes = [
         (LCC_ROUTE, lcc_route_bucket(st, dg), {
             registry.ROUTE_PACKED: lambda: lcc_iteration_packed(
@@ -89,15 +97,18 @@ def run(scale: str = "small") -> Dict:
             registry.ROUTE_UNPACKED: lambda: lcc_iteration(
                 dg, tdev, st)[0].omega,
         }),
-        (NLCC_ROUTE, nlcc_route_bucket(st, WAVE), {
+        (NLCC_ROUTE, nlcc_bucket, {
             registry.ROUTE_PACKED: lambda: check_walk_constraint_packed(
                 dg, st, cand, True, ids, bs),
             registry.ROUTE_UNPACKED: lambda: check_walk_constraint(
                 dg, st, cand, True, ids)[0],
+            registry.ROUTE_FUSED: lambda: check_walk_constraint_fused(
+                dg, st, cand, True, ids, bs),
         }),
     ]
 
     policy = registry.tune(cases=cases, routes=routes, repeat=3)
+    nlcc_entry = policy.route_entry_for(NLCC_ROUTE, backend, nlcc_bucket)
 
     # --- end-to-end: full prune per WDC template under the tuned policy
     patterns: Dict[str, Dict] = {}
@@ -124,6 +135,13 @@ def run(scale: str = "small") -> Dict:
         "jax": jax.__version__,
         "policy_path": registry.policy_path(),
         "policy": policy.to_json(),
+        # the measured NLCC wave (seconds per wave, per route) — the number
+        # the CI smoke job gates PR-over-PR regressions on
+        "nlcc_wave": {
+            "bucket": registry.bucket_key(nlcc_bucket),
+            "choice": nlcc_entry.choice,
+            "measured_s": dict(nlcc_entry.measured_s),
+        },
         "decisions": {
             "modes": {k: e.choice for k, e in policy.modes.items()},
             "routes": {k: e.choice for k, e in policy.routes.items()},

@@ -77,6 +77,7 @@ def main(argv=None):
             suites, args.scale,
             graph=dp.get("graph"),
             phases=dp.get("phase_breakdown"),
+            nlcc_wave=dp.get("nlcc_wave"),
         )
         print(f"roll-up -> {path}")
 

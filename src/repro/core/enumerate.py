@@ -86,6 +86,11 @@ def enumerate_matches(
         if rows is not None and rows.shape[0]:
             all_rows.append(rows)
         off += ids.size
+        # a TdsOverflow quarters cur_chunk (back off fast); each successful
+        # wave doubles it back toward the configured chunk so one dense
+        # source region cannot pin every later wave at a tiny chunk
+        if cur_chunk < chunk:
+            cur_chunk = min(chunk, cur_chunk * 2)
 
     if not all_rows:
         emb = np.zeros((0, template.n0), np.int32)

@@ -18,9 +18,21 @@ Cycle constraints: token must return to its source after |C0| hops
   -> survivor s iff F_L[source_s, s].
 Path constraints: token must reach a *different* vertex with the same label
   -> survivor s iff exists v != source_s with F_L[v, s] (the paper's `ack`).
+
+Wave execution (`verify_constraint`) is batched: every walk of a constraint
+(all rotations of a cycle, both directions of a path) shares one candidacy
+stack built from the constraint-entry omega, per-wave survivors accumulate
+into a device-side `keep` plane, and the head-column eliminations are applied
+on device — the only host round-trips per constraint are the head-candidacy
+read that sizes the wave loop and (under `count_messages`) one message-count
+readback. Three tunable routes execute a wave: `unpacked` boolean planes
+(scan-based hops), `packed` per-hop bitset_spmm launches, and the `fused`
+multi-hop bitset_wave kernel (pack/unpack once per wave, frontier resident
+across hops).
 """
 from __future__ import annotations
 
+import functools
 from typing import Dict, Optional, Tuple
 
 import numpy as np
@@ -47,9 +59,6 @@ def _frontier_hop(
     return nxt, n_msgs
 
 
-import functools
-
-
 NLCC_ROUTE = "prune.nlcc"
 
 
@@ -69,15 +78,17 @@ def nlcc_resolved_route(
     count_messages: bool = False,
     force_pallas: bool = False,
 ) -> str:
-    """The packed-vs-unpacked route CC/PC waves will actually take — the
-    single source of truth for both execution (`verify_constraint`) and
-    reporting (`prune`'s stats["dispatch_routes"]). Packed waves need a
-    blocked structure, a word-aligned wave, and no message counting (the
-    packed OR absorbs duplicates before they can be counted); within that
-    envelope force_pallas pins packed (parity tests) and otherwise the tuned
-    policy decides, defaulting to the old hardcoded choice — packed on TPU
-    where the kernel compiles, boolean planes elsewhere (off-TPU the packed
-    hop is the same survivors with extra pack/unpack per hop)."""
+    """The route CC/PC waves will actually take (packed / unpacked / fused) —
+    the single source of truth for both execution (`verify_constraint`) and
+    reporting (`prune`'s stats["dispatch_routes"]). Packed and fused waves
+    need a blocked structure, a word-aligned wave, and no message counting
+    (the packed OR absorbs duplicates before they can be counted); within
+    that envelope force_pallas pins packed (parity tests) and otherwise the
+    tuned policy picks the measured-fastest of the three, defaulting to the
+    old hardcoded choice — packed on TPU where the kernel compiles, boolean
+    planes elsewhere (off-TPU the per-hop packed route is the same survivors
+    with extra pack/unpack per hop; the fused route pays that once per
+    wave)."""
     from repro.kernels import compat, registry
 
     if blocked is None or count_messages or wave % 32 != 0:
@@ -89,7 +100,76 @@ def nlcc_resolved_route(
     )
     return registry.resolve_route(
         NLCC_ROUTE, nlcc_route_bucket(state, wave), default=untuned,
-        allowed=(registry.ROUTE_PACKED, registry.ROUTE_UNPACKED))
+        allowed=(registry.ROUTE_PACKED, registry.ROUTE_UNPACKED,
+                 registry.ROUTE_FUSED))
+
+
+def _initial_frontier(
+    n: int,
+    cand0: jnp.ndarray,       # bool[n] candidacy of the walk head
+    source_ids: jnp.ndarray,  # int32[S], -1 = pad
+    safe_src: jnp.ndarray,    # int32[S] = clip(source_ids, 0, n-1)
+) -> jnp.ndarray:
+    """F_0: one token plane per wave source, seeded at candidate sources."""
+    S = source_ids.shape[0]
+    frontier = jnp.zeros((n, S), dtype=bool)
+    return frontier.at[safe_src, jnp.arange(S)].set(
+        (source_ids >= 0) & jnp.take(cand0, safe_src)
+    )
+
+
+def _wave_survivors(
+    frontier: jnp.ndarray,    # bool[n, S] hop-L frontier
+    source_ids: jnp.ndarray,  # int32[S], -1 = pad
+    safe_src: jnp.ndarray,
+    is_cyclic: bool,
+) -> jnp.ndarray:
+    """CC: token returned to its source. PC: the paper's `ack` — token reached
+    some vertex other than its source."""
+    S = source_ids.shape[0]
+    if is_cyclic:
+        survived = frontier[safe_src, jnp.arange(S)]
+    else:
+        arrived_any = jnp.any(frontier, axis=0)
+        arrived_self = frontier[safe_src, jnp.arange(S)]
+        arrived_elsewhere = (
+            jnp.sum(frontier, axis=0) > arrived_self.astype(jnp.int32))
+        survived = arrived_any & arrived_elsewhere
+    return survived & (source_ids >= 0)
+
+
+def check_walk_constraint_fused(
+    dg: DeviceGraph,
+    state: PruneState,
+    walk_candidacy: jnp.ndarray,  # bool[L+1, n] candidacy per walk position
+    is_cyclic: bool,
+    source_ids: jnp.ndarray,  # int32[S] wave source ids, -1 = pad; S % 32 == 0
+    blocked,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """One CC/PC wave through the fused multi-hop wave engine: the packed
+    frontier is built ONCE, all L hops run inside a single `bitset_wave`
+    dispatch (Pallas kernel on TPU with the frontier VMEM-resident across
+    hops, the scan-based packed-word oracle elsewhere), and the result is
+    unpacked ONCE. Returns survived bool[S]."""
+    from repro.core.state import pack_bits, unpack_bits
+    from repro.kernels import ops as kops
+
+    n = state.omega.shape[0]
+    S = source_ids.shape[0]
+    assert S % 32 == 0, "packed frontier needs a word-aligned wave size"
+    safe_src = jnp.clip(source_ids, 0, n - 1)
+
+    packed = pack_bits(
+        _initial_frontier(n, walk_candidacy[0], source_ids, safe_src))
+    cand = jnp.where(
+        walk_candidacy[1:], jnp.uint32(0xFFFFFFFF), jnp.uint32(0))
+    packed = kops.bitset_wave(
+        packed, dg.src, dg.dst, n, state.edge_active, cand,
+        blocked=blocked, force_pallas=force_pallas,
+    )
+    frontier = unpack_bits(packed, S)
+    return _wave_survivors(frontier, source_ids, safe_src, is_cyclic)
 
 
 def check_walk_constraint_packed(
@@ -115,11 +195,8 @@ def check_walk_constraint_packed(
     L = walk_candidacy.shape[0] - 1
     safe_src = jnp.clip(source_ids, 0, n - 1)
 
-    frontier = jnp.zeros((n, S), dtype=bool)
-    frontier = frontier.at[safe_src, jnp.arange(S)].set(
-        (source_ids >= 0) & jnp.take(walk_candidacy[0], safe_src)
-    )
-    packed = pack_bits(frontier)  # uint32[n, S/32]
+    packed = pack_bits(
+        _initial_frontier(n, walk_candidacy[0], source_ids, safe_src))
     for r in range(1, L + 1):
         agg = kops.bitset_or_aggregate(
             packed, dg.src, dg.dst, n, state.edge_active,
@@ -127,15 +204,7 @@ def check_walk_constraint_packed(
         )
         packed = jnp.where(walk_candidacy[r][:, None], agg, jnp.uint32(0))
     frontier = unpack_bits(packed, S)
-
-    if is_cyclic:
-        survived = frontier[safe_src, jnp.arange(S)]
-    else:
-        arrived_any = jnp.any(frontier, axis=0)
-        arrived_self = frontier[safe_src, jnp.arange(S)]
-        arrived_elsewhere = jnp.sum(frontier, axis=0) > arrived_self.astype(jnp.int32)
-        survived = arrived_any & arrived_elsewhere
-    return survived & (source_ids >= 0)
+    return _wave_survivors(frontier, source_ids, safe_src, is_cyclic)
 
 
 @functools.partial(jax.jit, static_argnames=("is_cyclic", "count_messages"))
@@ -147,32 +216,23 @@ def check_walk_constraint(
     source_ids: jnp.ndarray,  # int32[S] background vertex ids (wave), -1 = pad
     count_messages: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Verify one CC/PC wave. Returns (survived bool[S], message_count)."""
+    """Verify one CC/PC wave. Returns (survived bool[S], message_count).
+
+    The hop loop is a `lax.scan` over the hop-indexed candidacy stack — one
+    XLA while-loop instead of L unrolled sweeps, so waves of any walk length
+    share a compiled body and trace time stays O(1) in L."""
     n = state.omega.shape[0]
-    S = source_ids.shape[0]
-    L = walk_candidacy.shape[0] - 1
     safe_src = jnp.clip(source_ids, 0, n - 1)
+    frontier = _initial_frontier(n, walk_candidacy[0], source_ids, safe_src)
 
-    frontier = jnp.zeros((n, S), dtype=bool)
-    frontier = frontier.at[safe_src, jnp.arange(S)].set(
-        (source_ids >= 0) & jnp.take(walk_candidacy[0], safe_src)
-    )
-    total_msgs = jnp.asarray(0)
-    for r in range(1, L + 1):
-        frontier, nm = _frontier_hop(
-            dg, frontier, state.edge_active, walk_candidacy[r], count_messages
-        )
-        total_msgs = total_msgs + nm
+    def hop(carry, cand_r):
+        f, total = carry
+        f, nm = _frontier_hop(dg, f, state.edge_active, cand_r, count_messages)
+        return (f, total + nm), None
 
-    if is_cyclic:
-        survived = frontier[safe_src, jnp.arange(S)]
-    else:
-        # paper's ack: any arrival at a vertex different from the source
-        arrived_any = jnp.any(frontier, axis=0)
-        arrived_self = frontier[safe_src, jnp.arange(S)]
-        arrived_elsewhere = jnp.sum(frontier, axis=0) > arrived_self.astype(jnp.int32)
-        survived = arrived_any & arrived_elsewhere
-    return survived & (source_ids >= 0), total_msgs
+    (frontier, total_msgs), _ = jax.lax.scan(
+        hop, (frontier, jnp.asarray(0)), walk_candidacy[1:])
+    return _wave_survivors(frontier, source_ids, safe_src, is_cyclic), total_msgs
 
 
 @functools.partial(jax.jit, static_argnames=("is_cyclic",))
@@ -233,9 +293,9 @@ def walk_frontiers_and_edges(
         bv_t = jnp.take(B, dg.src, axis=0)
         rev_live.append(jnp.any(fu_t & bv_t, axis=1) & state.edge_active)
         # backward hop: B_{r-1}[u] = OR over out-arcs (u->v) of B_r[v], & F_{r-1}
+        # (src is NOT sorted in the dst-sorted arc order)
         msgs = jnp.take(B, dg.dst, axis=0) & state.edge_active[:, None]
-        agg = jax.ops.segment_sum(
-            msgs.astype(jnp.int32), dg.src, num_segments=n) > 0
+        agg = segment_ops.segment_or_bool(msgs, dg.src, n, sorted=False)
         B = agg & fwd[r - 1]
     fwd_live = jnp.stack(fwd_live[::-1])   # [L, m], index r-1 = hop r
     rev_live = jnp.stack(rev_live[::-1])
@@ -258,9 +318,33 @@ def verify_constraint(
     """Alg. 5 for CC/PC (+ each rotation for cycles): eliminate the head
     template vertex from omega of every failing token source.
 
-    With `blocked` set (and message counting off), waves run through the
-    packed-frontier hop (`check_walk_constraint_packed`) — the registry routes
-    it onto the bitset kernel on TPU and its oracle elsewhere.
+    Batched wave executor: every walk of the constraint (all rotations of a
+    cycle, both directions of a path) is a row of one candidacy stack built
+    from the constraint-entry omega; the walks' waves all run against that
+    shared state, per-wave survivors accumulate into a device-side `keep`
+    plane, and the head-column eliminations (Alg. 5 line 8 — the heads are
+    distinct template vertices across a constraint's walks) are applied on
+    device at the end. Host round-trips per constraint: one head-candidacy
+    read to size the wave loop, plus one message-count readback under
+    `count_messages` — never a per-wave `survived` transfer. Always sound (a
+    token only survives by certifying a full walk, so no true match is ever
+    pruned). For cycle rotations it is also exactly as strong as the old
+    sequential per-rotation pass: a token completing rotation j through a
+    vertex rotation i eliminated would itself certify that vertex's cycle
+    candidacy, contradicting the elimination — so the narrowing the batch
+    skips could only have killed tokens that cannot complete anyway. For the
+    two directions of a path constraint on a *directed* graph that argument
+    does not apply (a reversed-walk arrival does not certify a forward walk)
+    and one batched pass may prune marginally less than the old sequential
+    pass; on this repo's undirected both-arc graphs the passes coincide, and
+    either way exactness is restored downstream (complete-TDS annotation /
+    enumeration).
+
+    With `blocked` set (and message counting off), the tuned policy routes
+    waves onto the `fused` multi-hop wave engine (`check_walk_constraint_fused`
+    — one bitset_wave dispatch per wave, pack/unpack once) or the per-hop
+    `packed` bitset_spmm route; the boolean-plane scan is the unpacked
+    fallback.
 
     edge_prune=True (requires template) additionally eliminates arcs that lie
     on NO completing walk for the template arcs this constraint covers — a
@@ -270,7 +354,6 @@ def verify_constraint(
     those template arcs."""
     if edge_prune and template is not None:
         state = _edge_prune_pass(dg, state, constraint, template, wave, stats)
-    walks = [constraint.walk]
     if constraint.is_cyclic:
         # a cycle constraint prunes the head only; verify every rotation
         base = constraint.walk[:-1]
@@ -282,46 +365,69 @@ def verify_constraint(
 
     from repro.kernels import registry as _registry
 
-    use_packed = nlcc_resolved_route(
+    route = nlcc_resolved_route(
         state, wave, blocked,
         count_messages=count_messages, force_pallas=force_pallas,
-    ) == _registry.ROUTE_PACKED
+    )
+    wave_stat = {
+        _registry.ROUTE_FUSED: "nlcc_fused_waves",
+        _registry.ROUTE_PACKED: "nlcc_packed_waves",
+        _registry.ROUTE_UNPACKED: "nlcc_plane_waves",
+    }[route]
     omega = state.omega
-    for walk in walks:
-        q0 = walk[0]
+    n = omega.shape[0]
+    heads = [w[0] for w in walks]
+    # ONE host sync per constraint: the head-candidacy columns size the wave
+    # loop (everything downstream stays on device)
+    head_cols = np.asarray(omega[:, jnp.asarray(heads, jnp.int32)])
+    host_syncs = 1
+    keep = jnp.zeros((len(walks), n), dtype=bool)
+    total_msgs = jnp.asarray(0)
+    n_waves = 0
+    for wi, walk in enumerate(walks):
         cand = jnp.stack([omega[:, q] for q in walk], axis=0)  # bool[L+1, n]
-        sources = np.flatnonzero(np.asarray(omega[:, q0]))
+        sources = np.flatnonzero(head_cols[:, wi])
         if sources.size == 0:
             continue
-        keep = np.zeros(omega.shape[0], dtype=bool)
         for off in range(0, sources.size, wave):
             ids = sources[off : off + wave]
             pad = wave - ids.size
             ids_padded = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+            ids_dev = jnp.asarray(ids_padded, jnp.int32)
             wave_state = PruneState(omega=omega, edge_active=state.edge_active)
-            if use_packed:
-                survived = check_walk_constraint_packed(
-                    dg, wave_state, cand, walk[0] == walk[-1],
-                    jnp.asarray(ids_padded, jnp.int32),
+            if route == _registry.ROUTE_FUSED:
+                survived = check_walk_constraint_fused(
+                    dg, wave_state, cand, walk[0] == walk[-1], ids_dev,
                     blocked, force_pallas=force_pallas,
                 )
-                n_msgs = 0
+            elif route == _registry.ROUTE_PACKED:
+                survived = check_walk_constraint_packed(
+                    dg, wave_state, cand, walk[0] == walk[-1], ids_dev,
+                    blocked, force_pallas=force_pallas,
+                )
             else:
                 survived, n_msgs = check_walk_constraint(
-                    dg, wave_state,
-                    cand, walk[0] == walk[-1], jnp.asarray(ids_padded, jnp.int32),
+                    dg, wave_state, cand, walk[0] == walk[-1], ids_dev,
                     count_messages=count_messages,
                 )
-            survived = np.asarray(survived)[: ids.size]
-            keep[ids[survived]] = True
+                total_msgs = total_msgs + n_msgs
+            # pads clip to vertex 0 with survived=False — max() cannot unset
+            keep = keep.at[wi, jnp.clip(ids_dev, 0, n - 1)].max(survived)
+            n_waves += 1
             if stats is not None:
-                stats["nlcc_messages"] = stats.get("nlcc_messages", 0) + int(n_msgs)
                 stats["nlcc_tokens"] = stats.get("nlcc_tokens", 0) + int(ids.size)
-                wkey = "nlcc_packed_waves" if use_packed else "nlcc_plane_waves"
-                stats[wkey] = stats.get(wkey, 0) + 1
-        # remove q0 candidacy from failing sources (Alg. 5 line 8)
-        fail = np.asarray(omega[:, q0]) & ~keep
-        omega = omega.at[:, q0].set(omega[:, q0] & jnp.asarray(~fail))
+                stats[wave_stat] = stats.get(wave_stat, 0) + 1
+    # remove head candidacy from failing sources (Alg. 5 line 8), on device
+    for wi, q0 in enumerate(heads):
+        omega = omega.at[:, q0].set(omega[:, q0] & keep[wi])
+    if stats is not None:
+        if count_messages:
+            stats["nlcc_messages"] = stats.get("nlcc_messages", 0) + int(total_msgs)
+            host_syncs += 1
+        stats["nlcc_constraints"] = stats.get("nlcc_constraints", 0) + 1
+        stats["nlcc_waves"] = stats.get("nlcc_waves", 0) + n_waves
+        # the acceptance contract: survivors never cross to the host per wave
+        stats["nlcc_host_syncs"] = stats.get("nlcc_host_syncs", 0) + host_syncs
     return PruneState(omega=omega, edge_active=state.edge_active)
 
 

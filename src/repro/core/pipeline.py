@@ -100,14 +100,17 @@ def prune(
     force_pallas: bool = False,
 ) -> PruneResult:
     """`blocked` (a graph.blocked.BlockedStructure) makes every LCC sweep and
-    eligible NLCC frontier hop *packed-capable*: the tuned dispatch policy
+    eligible NLCC wave *packed-capable*: the tuned dispatch policy
     (repro.kernels.registry, `registry.tune()` / the persisted policy cache)
-    then decides packed vs unpacked per shape bucket, and the kernel registry
-    decides pallas / interpret / ref per call. Untuned, the routing matches
-    the historical hardcoded choice (LCC: packed whenever `blocked` is given;
-    NLCC: packed only where the kernel compiles, i.e. on TPU). The routes
-    actually taken land in `stats["dispatch_routes"]`. `force_pallas` pins
-    the packed interpret-mode kernel path for parity testing."""
+    then picks the route per shape bucket — packed vs unpacked for LCC;
+    packed, unpacked, or the fused multi-hop wave engine (one `bitset_wave`
+    kernel call per NLCC wave, frontier resident across hops) for NLCC — and
+    the kernel registry decides pallas / interpret / ref per call. Untuned,
+    the routing matches the historical hardcoded choice (LCC: packed whenever
+    `blocked` is given; NLCC: packed only where the kernel compiles, i.e. on
+    TPU). The routes actually taken land in `stats["dispatch_routes"]`.
+    `force_pallas` pins the packed interpret-mode kernel path for parity
+    testing."""
     if isinstance(graph, Graph):
         if label_freq is None:
             label_freq = graph.label_frequency()

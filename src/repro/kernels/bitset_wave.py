@@ -1,0 +1,123 @@
+"""`bitset_wave` — fused multi-hop bit-packed OR-SpMM, the NLCC wave on TPU.
+
+The NLCC token-passing wave (paper Alg. 5/6) is L repetitions of the same
+blocked OR-SpMM as `bitset_spmm`, each followed by a per-hop candidacy mask:
+
+    F_r = (OR_{arc (u -> v) active} F_{r-1}[u]) & cand[r]        r = 1..L
+
+The single-hop route launches one `bitset_spmm` per hop, so every hop pays
+kernel-boundary traffic around the frontier (and, off-TPU, a pack/unpack
+round-trip through the oracle). Here the whole wave runs inside ONE
+`pallas_call` with the packed frontier resident in VMEM across all hops:
+
+  grid = (L, nnzb) — hops major, dst-sorted adjacency blocks minor.
+  `cur` scratch uint32[n_pad, W] holds frontier F_{h}; the output block
+  (constant index map, VMEM-resident for the whole grid) accumulates F_{h+1}.
+  Per (h, b) step the (dst_block, src_block) bitmask is unpacked and
+  contracted against the cur rows of the src block on the MXU, exactly like
+  `bitset_spmm`; at each step the dst row of the output is rewritten as
+  pack(acc > 0) & cand[h] (final at the row's last block). At the first step
+  of hop h+1 the output buffer is copied into `cur` and zeroed — the only
+  frontier movement between hops is VMEM -> VMEM.
+
+Pack/unpack therefore happens ONCE per wave (in the caller), not once per
+hop, and the per-hop block bitmasks are shared across hops (edge_active is
+constant within a wave).
+
+VMEM budget per step (bn=256, W=32, n_pad=2048):
+  cur + out 2 x 256 KiB, vals 256 KiB, acc 256x1024 f32 = 1 MiB,
+  mask block 8 KiB, cand row 8 KiB — ~1.8 MiB, comfortably inside 16 MiB.
+The ops-layer eligibility predicate rejects shapes whose resident frontier
+would blow the budget (huge n_pad x W), routing them to the oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import compat
+from repro.kernels.bitset_spmm import _pack_bool_u32, _unpack_words_f32
+
+
+def _kernel(pairs_ref, vals_ref, cand_ref, mask_ref, out_ref, cur_ref, acc_ref):
+    h = pl.program_id(0)
+    b = pl.program_id(1)
+    bn = acc_ref.shape[0]
+
+    # hop boundary: load the initial frontier (hop 0) or advance the wave
+    # (copy last hop's completed output into cur), then clear the output —
+    # dst blocks no adjacency block touches must aggregate to zero.
+    @pl.when(jnp.logical_and(h == 0, b == 0))
+    def _load_initial():
+        cur_ref[...] = vals_ref[...]
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(jnp.logical_and(h > 0, b == 0))
+    def _advance_hop():
+        cur_ref[...] = out_ref[...]
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    db = pairs_ref[b, 0]
+    sb = pairs_ref[b, 1]
+    prev_db = pairs_ref[jnp.maximum(b, 1) - 1, 0]
+    first = jnp.logical_or(b == 0, db != prev_db)
+
+    mask_f = _unpack_words_f32(mask_ref[0])                     # [BN, BN]
+    src_rows = cur_ref[pl.ds(pl.multiple_of(sb * bn, bn), bn), :]
+    vals_f = _unpack_words_f32(src_rows)                        # [BN, 32W]
+    partial = jax.lax.dot_general(
+        mask_f, vals_f, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                           # [BN, 32W]
+
+    @pl.when(first)
+    def _reset():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += partial
+    # Rewritten every step of the dst row; final (and masked by this hop's
+    # candidacy) at the row's last block — nothing reads it before hop h+1.
+    row = pl.ds(pl.multiple_of(db * bn, bn), bn)
+    cw = cand_ref[0, row]
+    out_ref[row, :] = _pack_bool_u32(acc_ref[...] > 0.5) & cw[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "n_pad", "interpret"))
+def bitset_wave(
+    pairs: jnp.ndarray,   # int32[nnzb, 2] (dst_block, src_block), dst-sorted
+    masks: jnp.ndarray,   # uint32[nnzb, BN, BN//32] dynamic active bitmasks
+    vals: jnp.ndarray,    # uint32[n_pad, W] packed initial frontier (hop 0)
+    cand: jnp.ndarray,    # uint32[L, n_pad] per-hop candidacy, 0 / 0xFFFFFFFF
+    *,
+    bn: int,
+    n_pad: int,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Run the full L-hop wave; returns the hop-L frontier uint32[n_pad, W]."""
+    nnzb = masks.shape[0]
+    n_hops = cand.shape[0]
+    w = vals.shape[1]
+    grid_spec = compat.prefetch_scalar_grid_spec(
+        num_scalar_prefetch=1,
+        grid=(n_hops, nnzb),
+        in_specs=[
+            pl.BlockSpec((n_pad, w), lambda h, b, pairs: (0, 0)),
+            pl.BlockSpec((1, n_pad), lambda h, b, pairs: (h, 0)),
+            pl.BlockSpec((1, bn, bn // 32), lambda h, b, pairs: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((n_pad, w), lambda h, b, pairs: (0, 0)),
+        scratch_shapes=[
+            compat.vmem((n_pad, w), jnp.uint32),
+            compat.vmem((bn, 32 * w), jnp.float32),
+        ],
+    )
+    return compat.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_pad, w), jnp.uint32),
+        interpret=interpret,
+        dimension_semantics=("arbitrary", "arbitrary"),
+    )(pairs, vals, cand, masks)

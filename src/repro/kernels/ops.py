@@ -23,6 +23,7 @@ from repro.graph.blocked import BlockedStructure, masks_from_active, pad_values
 from repro.kernels import ref as _ref
 from repro.kernels import registry
 from repro.kernels.bitset_spmm import bitset_spmm as _bitset_spmm_pallas
+from repro.kernels.bitset_wave import bitset_wave as _bitset_wave_pallas
 from repro.kernels.segment_agg import (
     TILE_F as SEGMENT_AGG_TILE_F,
     TILE_N as SEGMENT_AGG_TILE_N,
@@ -83,6 +84,77 @@ def bitset_or_aggregate(
     """OR-aggregate packed words along active arcs -> uint32[n, W]."""
     return registry.dispatch(
         "bitset_spmm", vals, dg_src, dg_dst, n, edge_active, blocked,
+        force_pallas=force_pallas,
+    )
+
+
+# ------------------------------------------------------------- bitset_wave
+# Resident state the fused wave keeps in VMEM: cur + out + vals frontiers
+# (uint32[n_pad, W] each), the f32 accumulator, one mask block, one candidacy
+# row. Shapes past this budget route to the oracle.
+BITSET_WAVE_VMEM_BUDGET = 12 * 2**20
+
+
+def _wave_pallas(vals, dg_src, dg_dst, n, edge_active, cand, blocked,
+                 *, interpret):
+    # masks are built ONCE per wave — edge_active is constant across hops —
+    # where the per-hop route rebuilds them around every bitset_spmm launch
+    if blocked.nnzb == 0 or cand.shape[0] == 0:
+        return jnp.zeros_like(vals) if cand.shape[0] else vals
+    masks = masks_from_active(blocked, edge_active)
+    cand_pad = jnp.zeros((cand.shape[0], blocked.n_pad), jnp.uint32)
+    cand_pad = cand_pad.at[:, :n].set(cand)
+    out = _bitset_wave_pallas(
+        jnp.asarray(blocked.pairs), masks, pad_values(vals, blocked), cand_pad,
+        bn=blocked.bn, n_pad=blocked.n_pad, interpret=interpret,
+    )
+    return out[:n]
+
+
+def _wave_eligible(vals, dg_src, dg_dst, n, edge_active, cand, blocked):
+    if blocked is None:
+        return False
+    w = int(vals.shape[-1])
+    resident = (
+        3 * blocked.n_pad * w * 4          # vals + cur scratch + out frontier
+        + blocked.bn * 32 * w * 4          # f32 accumulator
+        + blocked.bn * blocked.bnw * 4     # one mask block
+        + blocked.n_pad * 4                # one candidacy row
+    )
+    return resident <= BITSET_WAVE_VMEM_BUDGET
+
+
+registry.register(
+    "bitset_wave",
+    pallas=_wave_pallas,
+    ref=lambda vals, dg_src, dg_dst, n, edge_active, cand, blocked: (
+        _ref.bitset_wave_ref(vals, dg_src, dg_dst, n, edge_active, cand)
+    ),
+    eligible=_wave_eligible,
+    # one decision per (vertex-count, packed-width, hop-count) bucket — the
+    # NLCC wave width (W = wave/32) and walk length both shape the cost
+    bucket=lambda vals, dg_src, dg_dst, n, edge_active, cand, blocked: (
+        registry.shape_bucket(n) + (int(vals.shape[-1]), int(cand.shape[0]))
+    ),
+    doc="fused multi-hop bit-packed OR-SpMM (NLCC wave engine)",
+)
+
+
+def bitset_wave(
+    vals: jnp.ndarray,          # uint32[n, W] packed initial frontier
+    dg_src: jnp.ndarray,        # int32[m] dst-sorted
+    dg_dst: jnp.ndarray,
+    n: int,
+    edge_active: jnp.ndarray,   # bool[m]
+    cand: jnp.ndarray,          # uint32[L, n] per-hop candidacy, 0 / 0xFFFFFFFF
+    blocked: Optional[BlockedStructure] = None,
+    force_pallas: bool = False,
+) -> jnp.ndarray:
+    """Run the full L-hop NLCC wave in one kernel call -> uint32[n, W]."""
+    if cand.shape[0] == 0:
+        return vals
+    return registry.dispatch(
+        "bitset_wave", vals, dg_src, dg_dst, n, edge_active, cand, blocked,
         force_pallas=force_pallas,
     )
 

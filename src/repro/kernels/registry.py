@@ -40,9 +40,10 @@ the pre-policy registry. `force_pallas` always bypasses the policy — parity
 tests pin the kernel path.
 
 The policy also stores *route* decisions for choices that live above a single
-kernel call — today the packed-vs-unpacked `prune` routing (route names
-``prune.lcc`` and ``prune.nlcc``, see core/lcc.py and core/nlcc.py), which
-`resolve_route` serves to the hot loops.
+kernel call — today the `prune` routing (route names ``prune.lcc`` and
+``prune.nlcc``, see core/lcc.py and core/nlcc.py): packed vs unpacked sweeps,
+plus the fused multi-hop wave engine for NLCC (``ROUTE_FUSED``,
+kernels/bitset_wave.py). `resolve_route` serves these to the hot loops.
 """
 from __future__ import annotations
 
@@ -64,6 +65,9 @@ MODES = (MODE_PALLAS, MODE_INTERPRET, MODE_REF)
 
 ROUTE_PACKED = "packed"
 ROUTE_UNPACKED = "unpacked"
+# the fused multi-hop NLCC wave (kernels/bitset_wave.py): one kernel call per
+# wave instead of one bitset_spmm launch per hop
+ROUTE_FUSED = "fused"
 
 # wildcard bucket: one decision for every shape of a (kernel, backend) pair
 BUCKET_ANY = "*"
@@ -134,10 +138,15 @@ def shape_bucket(*dims: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
-def _bucket_key(bucket) -> str:
+def bucket_key(bucket) -> str:
+    """Render a shape bucket the way policy-table keys spell it ("2048x32",
+    "*", "scalar") — for reading measurements back out of a policy."""
     if bucket == BUCKET_ANY:
         return BUCKET_ANY
     return "x".join(str(b) for b in tuple(bucket)) or "scalar"
+
+
+_bucket_key = bucket_key
 
 
 def _entry_key(name: str, backend: str, bucket) -> str:
@@ -172,8 +181,9 @@ class DispatchPolicy:
     """Measured-cost dispatch table, keyed "<name>|<backend>|<bucket>".
 
     `modes` holds per-kernel mode decisions ("pallas"/"interpret"/"ref");
-    `routes` holds above-kernel routing decisions ("packed"/"unpacked").
-    Lookup tries the exact bucket first, then the ``*`` wildcard bucket.
+    `routes` holds above-kernel routing decisions ("packed"/"unpacked"/
+    "fused"). Lookup tries the exact bucket first, then the ``*`` wildcard
+    bucket.
     """
 
     modes: Dict[str, PolicyEntry] = dataclasses.field(default_factory=dict)
@@ -194,6 +204,13 @@ class DispatchPolicy:
     def route_for(self, name: str, backend: str, bucket) -> Optional[str]:
         entry = self._lookup(self.routes, name, backend, bucket)
         return entry.choice if entry is not None else None
+
+    def route_entry_for(self, name: str, backend: str, bucket
+                        ) -> Optional[PolicyEntry]:
+        """Full tuned route entry (choice + measured_s), with the same
+        exact-then-wildcard bucket lookup as `route_for` — the public way to
+        read measurements back out (benchmarks, roll-ups)."""
+        return self._lookup(self.routes, name, backend, bucket)
 
     # -- mutation
     def set_mode(self, name: str, backend: str, bucket, choice: str,

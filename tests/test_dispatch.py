@@ -53,15 +53,26 @@ def _bag_args(v=200, d=128, b=4, l=3):
     return (table, ids, weights)
 
 
-def test_all_four_kernels_registered():
+def test_all_five_kernels_registered():
     assert registry.names() == (
-        "bitset_spmm", "embedding_bag", "flash_attention", "segment_agg",
+        "bitset_spmm", "bitset_wave", "embedding_bag", "flash_attention",
+        "segment_agg",
     )
+
+
+def _wave_args(scale=6, w=2, bn=64, hops=3):
+    vals, src, dst, n, active, bs = _graph_args(scale=scale, w=w, bn=bn)
+    rng = np.random.default_rng(scale + hops)
+    cand = jnp.asarray(
+        np.where(rng.random((hops, n)) < 0.8, np.uint32(0xFFFFFFFF), np.uint32(0))
+    )
+    return (vals, src, dst, n, active, cand, bs)
 
 
 # --------------------------------------------------------------- routing
 CASES = [
     ("bitset_spmm", _graph_args(), {}),
+    ("bitset_wave", _wave_args(), {}),
     ("segment_agg", _seg_args(), {}),
     ("flash_attention", _attn_args(), {"causal": True, "window": None,
                                        "block_q": 128, "block_k": 128}),
@@ -93,6 +104,8 @@ def test_tpu_backend_routes_to_compiled_pallas(name, args, kw):
 INELIGIBLE = [
     # no blocked structure -> the kernel's grid cannot be built
     ("bitset_spmm", _graph_args()[:5] + (None,), {}),
+    # fused wave without a blocked structure -> scan-based oracle
+    ("bitset_wave", _wave_args()[:6] + (None,), {}),
     # NT % tile_n != 0
     ("segment_agg", _seg_args(nt=6), {}),
     # S not divisible by the kv block
@@ -106,7 +119,8 @@ INELIGIBLE = [
 
 
 @pytest.mark.parametrize("name,args,kw", INELIGIBLE,
-                         ids=["no-blocked", "tile-misaligned", "seq-misaligned",
+                         ids=["no-blocked", "wave-no-blocked",
+                              "tile-misaligned", "seq-misaligned",
                               "dqk-ne-dv"])
 def test_ineligible_shapes_route_to_ref_even_forced(name, args, kw):
     assert registry.resolve_mode(
@@ -118,6 +132,27 @@ def test_ineligible_shapes_route_to_ref_even_forced(name, args, kw):
 
 
 # ---------------------------------------------------------------- parity
+def test_bitset_wave_parity_through_wrapper():
+    vals, src, dst, n, active, cand, bs = _wave_args()
+    got = ops.bitset_wave(vals, src, dst, n, active, cand,
+                          blocked=bs, force_pallas=True)
+    want = ops.bitset_wave(vals, src, dst, n, active, cand, blocked=None)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitset_wave_equals_hop_by_hop_spmm():
+    # the fused L-hop wave must equal L single-hop bitset_spmm aggregations
+    # with the per-hop candidacy mask applied in between
+    vals, src, dst, n, active, cand, bs = _wave_args(hops=4)
+    got = ops.bitset_wave(vals, src, dst, n, active, cand,
+                          blocked=bs, force_pallas=True)
+    step = vals
+    for r in range(cand.shape[0]):
+        agg = ops.bitset_or_aggregate(step, src, dst, n, active, blocked=None)
+        step = agg & cand[r][:, None]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(step))
+
+
 def test_bitset_spmm_parity_through_wrapper():
     vals, src, dst, n, active, bs = _graph_args()
     got = ops.bitset_or_aggregate(vals, src, dst, n, active,
@@ -248,3 +283,172 @@ def test_prune_with_blocked_structure_matches_default():
     np.testing.assert_array_equal(base.omega, packed.omega)
     np.testing.assert_array_equal(base.vertex_mask, packed.vertex_mask)
     np.testing.assert_array_equal(base.edge_mask, packed.edge_mask)
+
+
+# --------------------------------------------- fused NLCC wave engine
+def _nlcc_setup(n=120, seed=9, bn=64):
+    from repro.core import Template, init_state
+
+    g = gen.erdos_renyi_graph(n, 5.0, seed=seed, n_labels=3)
+    dg = DeviceGraph.from_host(g)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    st = init_state(dg, tmpl)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst),
+                                 g.n, bn=bn)
+    return g, dg, tmpl, st, bs
+
+
+def _wave_ids(st, q0, wave, limit=None):
+    sources = np.flatnonzero(np.asarray(st.omega[:, q0]))[: limit or wave]
+    ids = np.full(wave, -1, np.int64)
+    ids[: sources.size] = sources
+    return jnp.asarray(ids, jnp.int32)
+
+
+@pytest.mark.parametrize("walk,is_cyclic", [
+    ((0, 1, 2, 0), True),   # cyclic: token must return to its source
+    ((0, 1, 2), False),     # path: the paper's ack at a different vertex
+], ids=["cyclic", "path"])
+@pytest.mark.parametrize("wave,limit", [
+    (32, None),   # word-aligned, fully populated
+    (64, 10),     # padded wave: sources < wave
+], ids=["aligned", "padded"])
+def test_fused_wave_matches_boolean_plane(walk, is_cyclic, wave, limit):
+    from repro.core.nlcc import (
+        check_walk_constraint, check_walk_constraint_fused,
+    )
+
+    g, dg, tmpl, st, bs = _nlcc_setup()
+    cand = jnp.stack([st.omega[:, q] for q in walk], axis=0)
+    ids = _wave_ids(st, walk[0], wave, limit)
+
+    want, _ = check_walk_constraint(dg, st, cand, is_cyclic, ids)
+    got = check_walk_constraint_fused(dg, st, cand, is_cyclic, ids, bs)
+    got_forced = check_walk_constraint_fused(
+        dg, st, cand, is_cyclic, ids, bs, force_pallas=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_forced), np.asarray(want))
+
+
+def test_fused_wave_empty_frontier_and_all_pruned_sources():
+    from repro.core.nlcc import check_walk_constraint_fused
+
+    g, dg, tmpl, st, bs = _nlcc_setup()
+    walk = (0, 1, 2, 0)
+    cand = jnp.stack([st.omega[:, q] for q in walk], axis=0)
+    # empty frontier: every wave slot is padding
+    empty = jnp.full((32,), -1, jnp.int32)
+    for force in (False, True):
+        out = check_walk_constraint_fused(
+            dg, st, cand, True, empty, bs, force_pallas=force)
+        assert not np.asarray(out).any()
+    # all-pruned sources: head candidacy fully eliminated kills every token
+    ids = _wave_ids(st, walk[0], 32)
+    dead = cand.at[0].set(jnp.zeros_like(cand[0]))
+    for force in (False, True):
+        out = check_walk_constraint_fused(
+            dg, st, dead, True, ids, bs, force_pallas=force)
+        assert not np.asarray(out).any()
+
+
+def test_fused_route_gates_fall_back_to_unpacked():
+    from repro.core.nlcc import nlcc_resolved_route, NLCC_ROUTE
+
+    g, dg, tmpl, st, bs = _nlcc_setup()
+    pol = registry.DispatchPolicy()
+    pol.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY, registry.ROUTE_FUSED)
+    registry.set_policy(pol)
+    try:
+        assert nlcc_resolved_route(st, 32, bs) == registry.ROUTE_FUSED
+        # capability gates beat the tuned fused choice
+        assert nlcc_resolved_route(st, 32, None) == registry.ROUTE_UNPACKED
+        assert nlcc_resolved_route(st, 33, bs) == registry.ROUTE_UNPACKED
+        assert nlcc_resolved_route(
+            st, 32, bs, count_messages=True) == registry.ROUTE_UNPACKED
+        # force_pallas still pins the per-hop packed parity path
+        assert nlcc_resolved_route(
+            st, 32, bs, force_pallas=True) == registry.ROUTE_PACKED
+    finally:
+        registry.set_policy(None)
+
+
+def test_prune_fused_route_matches_default_and_reports_waves():
+    from repro.core import Template, prune
+    from repro.core.nlcc import NLCC_ROUTE
+
+    g, dg, tmpl, st, bs = _nlcc_setup(seed=3, n=100)
+    registry.set_policy(None)
+    base = prune(g, tmpl, blocked=bs)
+    pol = registry.DispatchPolicy()
+    pol.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY, registry.ROUTE_FUSED)
+    registry.set_policy(pol)
+    try:
+        fused = prune(g, tmpl, blocked=bs)
+    finally:
+        registry.set_policy(None)
+    assert fused.stats["dispatch_routes"][NLCC_ROUTE] == registry.ROUTE_FUSED
+    fused_waves = sum(p.extra.get("nlcc_fused_waves", 0) for p in fused.phases)
+    other_waves = sum(p.extra.get("nlcc_packed_waves", 0)
+                      + p.extra.get("nlcc_plane_waves", 0)
+                      for p in fused.phases)
+    assert fused_waves > 0 and other_waves == 0
+    np.testing.assert_array_equal(base.omega, fused.omega)
+    np.testing.assert_array_equal(base.edge_mask, fused.edge_mask)
+
+
+def test_wave_executor_syncs_host_at_most_twice_per_constraint():
+    """The acceptance contract: survivors accumulate on device — host syncs
+    per CC/PC constraint stay bounded (head-candidacy read + optional message
+    readback) no matter how many waves the constraint takes."""
+    from repro.core import Template, prune
+
+    g, dg, tmpl, st, bs = _nlcc_setup()
+    # wave=32 forces many waves per constraint (~40 sources per label)
+    res = prune(g, tmpl, wave=32, blocked=bs)
+    stats_sum = {}
+    for p in res.phases:
+        for k, v in p.extra.items():
+            stats_sum[k] = stats_sum.get(k, 0) + v
+    n_constraints = stats_sum.get("nlcc_constraints", 0)
+    n_waves = stats_sum.get("nlcc_waves", 0)
+    assert n_constraints > 0 and n_waves > n_constraints
+    assert stats_sum["nlcc_host_syncs"] <= 2 * n_constraints
+
+    # the instrumented path may add exactly one message readback
+    res2 = prune(g, tmpl, wave=32, collect_stats=True)
+    stats_sum2 = {}
+    for p in res2.phases:
+        for k, v in p.extra.items():
+            stats_sum2[k] = stats_sum2.get(k, 0) + v
+    assert stats_sum2["nlcc_host_syncs"] <= 2 * stats_sum2["nlcc_constraints"]
+
+
+def test_fused_route_packs_once_per_wave(monkeypatch):
+    """Pack/unpack must happen once per wave on the fused route — not once
+    per hop (the per-hop oracle round-trip the fused engine eliminates)."""
+    from repro.core import state as state_mod
+    from repro.core.nlcc import check_walk_constraint_fused
+
+    g, dg, tmpl, st, bs = _nlcc_setup()
+    walk = (0, 1, 2, 0)  # 3 hops
+    cand = jnp.stack([st.omega[:, q] for q in walk], axis=0)
+    ids = _wave_ids(st, 0, 32)
+
+    calls = {"pack": 0, "unpack": 0}
+    real_pack, real_unpack = state_mod.pack_bits, state_mod.unpack_bits
+
+    def counting_pack(x):
+        calls["pack"] += 1
+        return real_pack(x)
+
+    def counting_unpack(x, n0):
+        calls["unpack"] += 1
+        return real_unpack(x, n0)
+
+    monkeypatch.setattr(state_mod, "pack_bits", counting_pack)
+    monkeypatch.setattr(state_mod, "unpack_bits", counting_unpack)
+    for force in (False, True):  # scan-based oracle AND interpret-mode kernel
+        calls["pack"] = calls["unpack"] = 0
+        check_walk_constraint_fused(
+            dg, st, cand, True, ids, bs, force_pallas=force)
+        assert calls == {"pack": 1, "unpack": 1}

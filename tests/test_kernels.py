@@ -45,6 +45,86 @@ def test_bitset_spmm_all_edges_inactive():
     assert int(np.asarray(got).sum()) == 0
 
 
+# ------------------------------------------------------------- bitset_wave
+@pytest.mark.parametrize("scale,w,bn,hops", [
+    (6, 1, 64, 1),    # single hop degenerates to bitset_spmm + mask
+    (7, 2, 128, 3),
+    (8, 4, 64, 5),
+    (6, 8, 32, 2),
+])
+def test_bitset_wave_matches_ref(scale, w, bn, hops):
+    g = gen.rmat_graph(scale, edge_factor=4, seed=scale + w)
+    dg = DeviceGraph.from_host(g)
+    rng = np.random.default_rng(scale * 10 + w + hops)
+    vals = jnp.asarray(rng.integers(0, 2**32, size=(g.n, w), dtype=np.uint32))
+    active = jnp.asarray(rng.random(dg.m) < 0.7)
+    cand = jnp.asarray(np.where(
+        rng.random((hops, g.n)) < 0.8, np.uint32(0xFFFFFFFF), np.uint32(0)))
+
+    want = ref.bitset_wave_ref(vals, dg.src, dg.dst, g.n, active, cand)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=bn)
+    got = ops.bitset_wave(
+        vals, dg.src, dg.dst, g.n, active, cand, blocked=bs, force_pallas=True
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_bitset_wave_ref_equals_iterated_spmm_ref():
+    # the scan-based packed-word oracle against L iterations of the
+    # single-hop oracle with the candidacy mask applied between hops
+    g = gen.erdos_renyi_graph(200, 5.0, seed=11)
+    dg = DeviceGraph.from_host(g)
+    rng = np.random.default_rng(11)
+    vals = jnp.asarray(rng.integers(0, 2**32, size=(g.n, 2), dtype=np.uint32))
+    active = jnp.asarray(rng.random(dg.m) < 0.6)
+    cand = jnp.asarray(np.where(
+        rng.random((4, g.n)) < 0.75, np.uint32(0xFFFFFFFF), np.uint32(0)))
+    got = ref.bitset_wave_ref(vals, dg.src, dg.dst, g.n, active, cand)
+    step = vals
+    for r in range(cand.shape[0]):
+        step = ref.bitset_spmm_ref(step, dg.src, dg.dst, g.n, active) & cand[r][:, None]
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(step))
+
+
+def test_bitset_wave_all_edges_inactive():
+    g = gen.erdos_renyi_graph(100, 4.0, seed=0)
+    dg = DeviceGraph.from_host(g)
+    vals = jnp.ones((g.n, 1), jnp.uint32)
+    cand = jnp.full((2, g.n), 0xFFFFFFFF, jnp.uint32)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=32)
+    for force in (False, True):
+        got = ops.bitset_wave(
+            vals, dg.src, dg.dst, g.n, jnp.zeros(dg.m, bool), cand,
+            blocked=bs, force_pallas=force)
+        assert int(np.asarray(got).sum()) == 0
+
+
+def test_bitset_wave_zero_hops_is_identity():
+    vals = jnp.asarray(
+        np.random.default_rng(0).integers(0, 2**32, size=(16, 2), dtype=np.uint32))
+    src = jnp.zeros((0,), jnp.int32)
+    dst = jnp.zeros((0,), jnp.int32)
+    cand = jnp.zeros((0, 16), jnp.uint32)
+    out = ops.bitset_wave(vals, src, dst, 16, jnp.zeros((0,), bool), cand)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(vals))
+
+
+def test_bitset_wave_vmem_budget_gates_eligibility():
+    from repro.kernels.ops import _wave_eligible, BITSET_WAVE_VMEM_BUDGET
+
+    g = gen.erdos_renyi_graph(256, 3.0, seed=1)
+    dg = DeviceGraph.from_host(g)
+    bs = build_blocked_structure(np.asarray(dg.src), np.asarray(dg.dst), g.n, bn=64)
+    small = jnp.ones((g.n, 2), jnp.uint32)
+    cand = jnp.ones((2, g.n), jnp.uint32)
+    assert _wave_eligible(small, dg.src, dg.dst, g.n, None, cand, bs)
+    # a frontier too wide to keep resident in VMEM must route to the oracle
+    huge_w = BITSET_WAVE_VMEM_BUDGET // (3 * bs.n_pad * 4) + 1
+    huge = jnp.ones((g.n, huge_w), jnp.uint32)
+    assert not _wave_eligible(huge, dg.src, dg.dst, g.n, None, cand, bs)
+    assert not _wave_eligible(small, dg.src, dg.dst, g.n, None, cand, None)
+
+
 def test_blocked_masks_roundtrip():
     """Every (src,dst) arc must land on exactly its bit."""
     g = gen.erdos_renyi_graph(300, 5.0, seed=3)

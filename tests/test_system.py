@@ -100,3 +100,34 @@ def test_single_vertex_template():
     g = gen.star_graph(4, center_label=3, leaf_label=1)
     res = prune(g, Template([1], []))
     assert res.counts()["V*"] == 4
+
+
+def test_enumeration_chunk_recovers_after_overflow(monkeypatch):
+    """A TdsOverflow must shrink only the overflowing wave: subsequent source
+    chunks grow back toward the configured chunk instead of staying tiny for
+    the rest of the enumeration."""
+    from repro.core import enumerate as enum_mod
+    from repro.core.tds import TdsOverflow
+
+    g = gen.erdos_renyi_graph(150, 6.0, seed=1, n_labels=3)
+    tmpl = Template([0, 1, 2, 1], [(0, 1), (1, 2), (2, 3)])
+    res = prune(g, tmpl)
+
+    sizes = []
+    real_tds_walk = enum_mod.tds_walk
+    state = {"overflowed": False}
+
+    def flaky_tds_walk(sub, walk, ids, **kw):
+        sizes.append(len(ids))
+        if not state["overflowed"] and len(ids) >= 16:
+            state["overflowed"] = True  # one dense region overflows once
+            raise TdsOverflow("simulated")
+        return real_tds_walk(sub, walk, ids, **kw)
+
+    monkeypatch.setattr(enum_mod, "tds_walk", flaky_tds_walk)
+    enum = enumerate_matches(res.dg, res.state, tmpl, chunk=16)
+    oracle = enumerate_matches_bruteforce(g, tmpl)
+    assert enum.n_embeddings == len(oracle)  # recovery never loses matches
+    ok_sizes = sizes[1:]  # sizes after the simulated overflow
+    assert ok_sizes[0] == 4  # quartered for the overflowing wave
+    assert max(ok_sizes) == 16  # ...but later waves grow back to `chunk`
