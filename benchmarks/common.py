@@ -114,6 +114,13 @@ def validate_rollup(payload: Dict) -> None:
     for i, ph in enumerate(payload["phases"]):
         need(ph, "phase", str, f"phases[{i}]")
         need(ph, "seconds", (int, float), f"phases[{i}]")
+    if "sharded_prune" in payload:  # additive (PR 4): sharded end-to-end point
+        sp = payload["sharded_prune"]
+        if not isinstance(sp, dict):
+            raise ValueError("roll-up sharded_prune must be a dict")
+        need(sp, "P", int, "sharded_prune")
+        need(sp, "seconds", (int, float), "sharded_prune")
+        need(sp, "matches_local", bool, "sharded_prune")
 
 
 def write_rollup(
@@ -123,6 +130,8 @@ def write_rollup(
     graph: Optional[Dict] = None,
     phases: Optional[List[Dict]] = None,
     nlcc_wave: Optional[Dict] = None,
+    sharded_prune: Optional[Dict] = None,
+    policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
 ) -> str:
     """Write the repo-root BENCH_pipeline.json perf-trajectory roll-up.
@@ -133,6 +142,12 @@ def write_rollup(
     nlcc_wave  {"choice": route, "measured_s": {route: seconds}} — the
     measured NLCC wave time per route (the CI regression gate reads this;
     additive, so older roll-ups without it stay schema-valid)
+    sharded_prune  {"P": ..., "seconds": ..., "matches_local": ...} — the
+    sharded end-to-end prune point from benchmarks/strong_scaling.py
+    (additive, PR 4)
+    policy_fallback  a previously recorded "policy" block to keep when NO
+    policy is active in the registry (partial --only runs on untuned
+    checkouts must not wipe the committed tuning trajectory)
     The tuned dispatch decisions (chosen kernel modes + packed/unpacked/fused
     routes) come from the active registry policy. Validates before writing.
     """
@@ -148,10 +163,13 @@ def write_rollup(
         "graph": dict(graph or {}),
         "suites": suites,
         "phases": list(phases or []),
-        "policy": policy.to_json() if policy is not None else {},
+        "policy": (policy.to_json() if policy is not None
+                   else dict(policy_fallback or {})),
     }
     if nlcc_wave:
         payload["nlcc_wave"] = dict(nlcc_wave)
+    if sharded_prune:
+        payload["sharded_prune"] = dict(sharded_prune)
     validate_rollup(payload)
     out = path or rollup_path()
     with open(out, "w") as f:

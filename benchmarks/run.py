@@ -16,6 +16,7 @@ under measured routing rather than the untuned fallback.
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -42,19 +43,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small",
                     choices=["small", "medium", "large"])
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names to run")
     ap.add_argument("--no-rollup", action="store_true",
                     help="skip writing the repo-root BENCH_pipeline.json")
     args = ap.parse_args(argv)
     known = [name for name, _ in SUITES]
-    if args.only and args.only not in known:
-        ap.error(f"--only {args.only!r} matches no suite; known: {known}")
+    only = args.only.split(",") if args.only else None
+    if only:
+        for sel in only:
+            if sel not in known:
+                ap.error(f"--only {sel!r} matches no suite; known: {known}")
 
     suites = {}
     payloads = {}
     failures = []
     for name, desc in SUITES:
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         mod = __import__(f"benchmarks.{name}", fromlist=["run"])
         t0 = time.perf_counter()
@@ -73,11 +78,29 @@ def main(argv=None):
 
     if suites and not args.no_rollup:
         dp = payloads.get("dispatch_policy", {})
+        carried = {}
+        if only:
+            # a partial (--only) run refreshes only its own suites: merge into
+            # the existing same-scale roll-up so the other recorded suite
+            # timings (the PR-over-PR trajectory) are not silently dropped
+            try:
+                with open(common.rollup_path()) as f:
+                    prev = json.load(f)
+            except (OSError, ValueError):
+                prev = {}
+            if prev.get("scale") == args.scale:
+                suites = {**prev.get("suites", {}), **suites}
+                carried = {k: prev.get(k)
+                           for k in ("graph", "phases", "nlcc_wave",
+                                     "sharded_prune", "policy")}
         path = common.write_rollup(
             suites, args.scale,
-            graph=dp.get("graph"),
-            phases=dp.get("phase_breakdown"),
-            nlcc_wave=dp.get("nlcc_wave"),
+            graph=dp.get("graph") or carried.get("graph"),
+            phases=dp.get("phase_breakdown") or carried.get("phases"),
+            nlcc_wave=dp.get("nlcc_wave") or carried.get("nlcc_wave"),
+            sharded_prune=(payloads.get("strong_scaling", {}).get("sharded_prune")
+                           or carried.get("sharded_prune")),
+            policy_fallback=carried.get("policy"),
         )
         print(f"roll-up -> {path}")
 

@@ -3,7 +3,14 @@ shard counts. On this CPU host true wall-clock scaling cannot be measured;
 following the paper's own methodology we report, per shard count P:
 per-phase wall time of the single-device engine, plus the distributed
 engine's per-shard work distribution (max/mean active arcs per shard — the
-quantity that bounds strong scaling, §5.3)."""
+quantity that bounds strong scaling, §5.3).
+
+Also records one sharded END-TO-END prune point (the full pipeline through
+the sim execution backend, core/engine.py) — wall seconds plus a bit-parity
+check against the local engine. `benchmarks.run` copies it into the
+BENCH_pipeline.json roll-up under the additive `sharded_prune` key, so the
+sharded path's cost trajectory is visible PR-over-PR alongside the
+single-device phases."""
 from __future__ import annotations
 
 import time
@@ -14,17 +21,24 @@ import numpy as np
 from repro.core.template import Template
 from repro.core.pipeline import prune
 from repro.core.loadbalance import imbalance_stats
+from repro.graph.partition import partition_graph
 from repro.graph.structs import DeviceGraph
-from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save, timer
+
+SHARDED_PRUNE_P = 4
+SHARDED_PRUNE_TEMPLATE = "T3-square"
 
 
 def run(scale: str = "small") -> Dict:
     g = graph_for(scale)
     dg = DeviceGraph.from_host(g)
     out: Dict = {"graph": {"n": g.n, "m": g.m}, "patterns": {}}
+    local_result = None
     for name, (labels, edges) in WDC_LIKE_TEMPLATES.items():
         tmpl = Template(labels, edges)
         res = prune(g, tmpl, collect_stats=True)
+        if name == SHARDED_PRUNE_TEMPLATE:  # parity baseline, reused below
+            local_result = res
         phases = [
             {"phase": p.phase, "constraint": p.constraint, "seconds": p.seconds,
              "V*": p.active_vertices, "E*": p.active_edges}
@@ -45,6 +59,27 @@ def run(scale: str = "small") -> Dict:
             "per_shard_balance": shards,
             "stats": res.stats,
         }
+
+    # sharded end-to-end point: the whole pipeline through the sim backend.
+    # The parity baseline is the loop's local result above — routing differs
+    # under collect_stats but the pruned bits are route-invariant (pinned by
+    # the parity suite), so no second local prune is paid.
+    labels, edges = WDC_LIKE_TEMPLATES[SHARDED_PRUNE_TEMPLATE]
+    tmpl = Template(labels, edges)
+    local = local_result
+    part = partition_graph(g, SHARDED_PRUNE_P)
+    sharded, secs = timer(lambda: prune(g, tmpl, partition=part))
+    out["sharded_prune"] = {
+        "P": SHARDED_PRUNE_P,
+        "template": SHARDED_PRUNE_TEMPLATE,
+        "backend": sharded.stats["backend"],
+        "seconds": secs,
+        "nlcc_route": sharded.stats["dispatch_routes"]["prune.nlcc"],
+        "solution": sharded.counts(),
+        "matches_local": bool(
+            np.array_equal(local.omega, sharded.omega)
+            and np.array_equal(local.edge_mask, sharded.edge_mask)),
+    }
     save("strong_scaling", out)
     return out
 

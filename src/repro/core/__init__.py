@@ -8,6 +8,9 @@ from repro.core.template import Template, NonLocalConstraint, generate_constrain
 from repro.core.state import PruneState, init_state, pack_bits, unpack_bits
 from repro.core.lcc import TemplateDev, lcc_iteration, lcc_fixpoint
 from repro.core.pipeline import prune, PruneResult
+from repro.core.engine import (
+    LocalBackend, SimBackend, SpmdBackend, make_backend,
+)
 from repro.core.enumerate import enumerate_matches, EnumerationResult, template_walk
 from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
 
@@ -24,6 +27,10 @@ __all__ = [
     "lcc_fixpoint",
     "prune",
     "PruneResult",
+    "LocalBackend",
+    "SimBackend",
+    "SpmdBackend",
+    "make_backend",
     "enumerate_matches",
     "EnumerationResult",
     "template_walk",

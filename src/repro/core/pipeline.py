@@ -5,6 +5,14 @@
         G* <- NLCC(G*, G0, C0)
         if anything was eliminated: G* <- LCC(G*, G0)
 
+One driver serves every execution backend (core/engine.py): `local` (single
+device — today's optimized path), `spmd` (`mesh=` — shard_map + all_to_all
+over an `EdgePartition`; the whole pipeline runs where the partitioned state
+lives) and `sim` (`partition=` without a mesh — vmap-simulated shards for
+single-process parity tests). The driver's control decisions (run LCC after a
+constraint?) read ONE device bool per constraint; phase snapshots accumulate
+device-side and materialize once at the end (eager under collect_stats=True).
+
 Flags expose the paper's ablations:
   edge_elimination=False  — vertex-elimination-only baseline (Fig. 6a)
   work_aggregation=False  — TDS token dedup off (Fig. 6b)
@@ -15,6 +23,7 @@ Flags expose the paper's ablations:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, List, Optional, Union
 
@@ -23,12 +32,8 @@ import jax.numpy as jnp
 
 from repro.graph.structs import Graph, DeviceGraph
 from repro.core.template import Template, generate_constraints, NonLocalConstraint
-from repro.core.state import PruneState, init_state
-from repro.core.lcc import (
-    TemplateDev, lcc_iteration, lcc_fixpoint, lcc_fixpoint_packed,
-)
-from repro.core import nlcc as nlcc_mod
-from repro.core import tds as tds_mod
+from repro.core.state import PruneState
+from repro.core import engine as engine_mod
 
 
 @dataclasses.dataclass
@@ -50,18 +55,20 @@ class PruneResult:
     phases: List[PhaseStat]
     stats: Dict
 
-    @property
+    # The masks are device->host materializations hit repeatedly by benchmarks
+    # and enumeration — computed once, cached on the instance.
+    @functools.cached_property
     def vertex_mask(self) -> np.ndarray:
-        return np.asarray(self.state.omega).any(axis=1)
+        return self.omega.any(axis=1)
 
-    @property
+    @functools.cached_property
     def edge_mask(self) -> np.ndarray:
         """Arc mask in the dst-sorted DeviceGraph order, endpoint-consistent."""
         vm = self.vertex_mask
         ea = np.asarray(self.state.edge_active)
         return ea & vm[np.asarray(self.dg.src)] & vm[np.asarray(self.dg.dst)]
 
-    @property
+    @functools.cached_property
     def omega(self) -> np.ndarray:
         return np.asarray(self.state.omega)
 
@@ -70,15 +77,6 @@ class PruneResult:
             "V*": int(self.vertex_mask.sum()),
             "E*": int(self.edge_mask.sum()),
         }
-
-
-def _snapshot(state: PruneState, phase, cname, secs, extra) -> PhaseStat:
-    c = state.counts()
-    return PhaseStat(
-        phase=phase, constraint=cname, seconds=secs,
-        active_vertices=c["active_vertices"], active_edges=c["active_edges"],
-        omega_bits=c["omega_bits"], extra=extra,
-    )
 
 
 def prune(
@@ -98,59 +96,71 @@ def prune(
     collect_stats: bool = False,
     blocked=None,
     force_pallas: bool = False,
+    mesh=None,
+    partition=None,
 ) -> PruneResult:
-    """`blocked` (a graph.blocked.BlockedStructure) makes every LCC sweep and
-    eligible NLCC wave *packed-capable*: the tuned dispatch policy
-    (repro.kernels.registry, `registry.tune()` / the persisted policy cache)
-    then picks the route per shape bucket — packed vs unpacked for LCC;
-    packed, unpacked, or the fused multi-hop wave engine (one `bitset_wave`
-    kernel call per NLCC wave, frontier resident across hops) for NLCC — and
-    the kernel registry decides pallas / interpret / ref per call. Untuned,
-    the routing matches the historical hardcoded choice (LCC: packed whenever
-    `blocked` is given; NLCC: packed only where the kernel compiles, i.e. on
-    TPU). The routes actually taken land in `stats["dispatch_routes"]`.
-    `force_pallas` pins the packed interpret-mode kernel path for parity
-    testing."""
-    if isinstance(graph, Graph):
-        if label_freq is None:
-            label_freq = graph.label_frequency()
-        dg = DeviceGraph.from_host(graph)
-    else:
-        dg = graph
-    tdev = TemplateDev(template)
-    stats: Dict = {"edge_elimination": edge_elimination, "work_aggregation": work_aggregation}
-    phases: List[PhaseStat] = []
+    """Run the full pruning pipeline on the chosen execution backend.
 
-    state = initial_state if initial_state is not None else init_state(dg, template)
+    `mesh=` (a jax Mesh) runs the ENTIRE pipeline sharded under shard_map —
+    the initial LCC, the ordered NLCC constraint loop with the batched wave
+    executor, psum-reduced convergence — over an `EdgePartition` built from
+    the host graph (or passed via `partition=`, an EdgePartition or a shard
+    count). `partition=` without a mesh uses the vmap-simulated `sim` backend
+    (bit-identical math, single process). The result is the gathered global
+    state, directly consumable by `enumerate_matches`.
+
+    On the local backend, `blocked` (a graph.blocked.BlockedStructure) makes
+    every LCC sweep and eligible NLCC wave *packed-capable*: the tuned
+    dispatch policy (repro.kernels.registry, `registry.tune()` / the
+    persisted policy cache) then picks the route per shape bucket — packed vs
+    unpacked for LCC; packed, unpacked, or the fused multi-hop wave engine
+    (one `bitset_wave` kernel call per NLCC wave, frontier resident across
+    hops) for NLCC — and the kernel registry decides pallas / interpret / ref
+    per call. Untuned, the routing matches the historical hardcoded choice
+    (LCC: packed whenever `blocked` is given; NLCC: packed only where the
+    kernel compiles, i.e. on TPU). On the sharded backends routes resolve per
+    SHARD-LOCAL shape bucket (`registry.shard_bucket`) among the fused /
+    packed / unpacked wave programs. The routes actually taken land in
+    `stats["dispatch_routes"]`. `force_pallas` pins the packed interpret-mode
+    kernel path for parity testing (local backend only)."""
+    if isinstance(graph, Graph) and label_freq is None:
+        label_freq = graph.label_frequency()
+
+    backend = engine_mod.make_backend(
+        graph, template, mesh=mesh, partition=partition,
+        wave=wave, blocked=blocked, force_pallas=force_pallas,
+        edge_elimination=edge_elimination, collect_stats=collect_stats,
+        nlcc_edge_prune=nlcc_edge_prune, tds_chunk=tds_chunk,
+        tds_max_rows=tds_max_rows, work_aggregation=work_aggregation,
+        guarantee_precision=guarantee_precision,
+    )
+    dg = backend.dg
+    stats: Dict = {"edge_elimination": edge_elimination,
+                   "work_aggregation": work_aggregation,
+                   "backend": backend.name}
+    raw_phases: List[tuple] = []
+
+    backend.init(initial_state)
     if template.n0 == 1:
-        return PruneResult(state, template, dg, phases, stats)
+        return PruneResult(backend.final_state(), template, dg, [], stats)
 
-    if blocked is not None:
-        # record the packed-vs-unpacked routing the sweeps below will actually
-        # take — same helpers, same gates (benchmarks surface this in the
-        # BENCH_pipeline.json roll-up)
-        from repro.kernels import registry as _registry
-        from repro.core.lcc import LCC_ROUTE, lcc_resolved_route
-        from repro.core.nlcc import NLCC_ROUTE, nlcc_resolved_route
+    backend.record_routes(stats)  # each backend decides what (if anything) to record
 
-        stats["dispatch_routes"] = {
-            # the Fig-6a ablation (_lcc_no_edge_elim) never reaches the
-            # packed path, whatever the policy says
-            LCC_ROUTE: (_registry.ROUTE_UNPACKED if not edge_elimination
-                        else lcc_resolved_route(
-                state, dg, tdev, blocked,
-                collect_stats=collect_stats, force_pallas=force_pallas)),
-            NLCC_ROUTE: nlcc_resolved_route(
-                state, wave, blocked,
-                count_messages=collect_stats, force_pallas=force_pallas),
-        }
-        stats["dispatch_policy_active"] = _registry.get_policy() is not None
+    def snap(phase, cname, t0, extra):
+        # the phase's wall time must include its device work (the recorded
+        # perf trajectory compares PR-over-PR), so fence the stream — a sync
+        # with NO transfer — before timestamping. The snapshot counts stay a
+        # lazy device value until ONE materialization at the end of the run;
+        # eager host counts only under collect_stats=True (satellite of PR 4)
+        backend.sync()
+        secs = time.perf_counter() - t0
+        counts = backend.counts_host() if collect_stats else backend.counts_dev()
+        raw_phases.append((phase, cname, secs, extra, counts))
 
     # --- initial LCC
     t0 = time.perf_counter()
-    state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
-                 blocked=blocked, force_pallas=force_pallas)
-    phases.append(_snapshot(state, "LCC", None, time.perf_counter() - t0, {}))
+    backend.lcc(stats)
+    snap("LCC", None, t0, {})
 
     # --- NLCC loop
     # Beyond-paper fast path: with forward-backward frontier edge pruning,
@@ -173,75 +183,37 @@ def prune(
     stats["n_constraints"] = len(constraints)
     for c in constraints:
         t0 = time.perf_counter()
-        before = state.counts()
         cstats: Dict = {}
         if c.kind in ("cycle", "path"):
-            state = nlcc_mod.verify_constraint(
-                dg, state, c, template.labels, wave=wave, stats=cstats,
-                count_messages=collect_stats,
-                edge_prune=nlcc_edge_prune, template=template,
-                blocked=blocked, force_pallas=force_pallas,
-            )
+            changed = backend.nlcc(c, cstats)
         else:
-            state = tds_mod.verify_tds_constraint(
-                dg, state, c, chunk=tds_chunk, max_rows=tds_max_rows,
-                stats=cstats, annotate=(c.complete and guarantee_precision),
-                dedup=work_aggregation,
-            )
-        after = state.counts()
-        phases.append(
-            _snapshot(state, f"NLCC-{c.kind}", str(c.walk), time.perf_counter() - t0, cstats)
-        )
-        if after != before:
+            changed = backend.tds(c, cstats)
+        snap(f"NLCC-{c.kind}", str(c.walk), t0, cstats)
+        # ONE device bool decides the re-run — not six blocking count reads
+        if bool(changed):
             t0 = time.perf_counter()
-            state = _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
-                         blocked=blocked, force_pallas=force_pallas)
-            phases.append(_snapshot(state, "LCC", None, time.perf_counter() - t0, {}))
+            backend.lcc(stats)
+            snap("LCC", None, t0, {})
 
-    return PruneResult(state, template, dg, phases, stats)
-
-
-def _lcc(dg, tdev, state, edge_elimination, stats, collect_stats,
-         blocked=None, force_pallas=False):
-    if not edge_elimination:
-        # ablation: run vertex elimination but keep every endpoint-active edge
-        return _lcc_no_edge_elim(dg, tdev, state, stats)
-    if blocked is not None and not collect_stats and not tdev.needs_counts:
-        return lcc_fixpoint_packed(
-            dg, tdev, state, blocked, stats=stats, force_pallas=force_pallas)
-    if collect_stats:
-        # python loop to count per-iteration messages (active arcs at send time)
-        it = 0
-        while True:
-            stats["lcc_messages"] = stats.get("lcc_messages", 0) + int(
-                jnp.sum(state.edge_active)
-            )
-            new_state, changed = lcc_iteration(dg, tdev, state)
-            it += 1
-            state = new_state
-            if not bool(changed) or it > 1000:
-                break
-        stats["lcc_iterations"] = stats.get("lcc_iterations", 0) + it
-        return state
-    return lcc_fixpoint(dg, tdev, state, stats=stats)
+    backend.finalize_stats(stats)
+    return PruneResult(
+        backend.final_state(), template, dg, _materialize(raw_phases), stats)
 
 
-def _lcc_no_edge_elim(dg, tdev, state, stats):
-    """Vertex-elimination-only LCC (Fig. 6a baseline): edges stay active while
-    both endpoints are active, regardless of label compatibility."""
-    it = 0
-    while True:
-        new_state, changed = lcc_iteration(dg, tdev, state)
-        vact = jnp.any(new_state.omega, axis=1)
-        ea = jnp.take(vact, dg.src) & jnp.take(vact, dg.dst)
-        new_state = PruneState(omega=new_state.omega, edge_active=ea)
-        changed = jnp.any(new_state.omega != state.omega) | jnp.any(
-            new_state.edge_active != state.edge_active
-        )
-        state = new_state
-        it += 1
-        stats["lcc_messages"] = stats.get("lcc_messages", 0) + int(jnp.sum(ea))
-        if not bool(changed) or it > 1000:
-            break
-    stats["lcc_iterations"] = stats.get("lcc_iterations", 0) + it
-    return state
+def _materialize(raw_phases: List[tuple]) -> List[PhaseStat]:
+    """Turn accumulated snapshots into PhaseStats. Deferred (device-array)
+    counts are stacked and transferred in ONE host sync."""
+    deferred = [c for *_, c in raw_phases if not isinstance(c, dict)]
+    if deferred:
+        mat = iter(np.asarray(jnp.stack(deferred)))
+    phases: List[PhaseStat] = []
+    for phase, cname, secs, extra, counts in raw_phases:
+        if isinstance(counts, dict):
+            av, ae, ob = (counts["active_vertices"], counts["active_edges"],
+                          counts["omega_bits"])
+        else:
+            av, ae, ob = (int(x) for x in next(mat))
+        phases.append(PhaseStat(
+            phase=phase, constraint=cname, seconds=secs,
+            active_vertices=av, active_edges=ae, omega_bits=ob, extra=extra))
+    return phases

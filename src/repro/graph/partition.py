@@ -22,7 +22,7 @@ same shapes analytically for dry-runs (no allocation).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 import jax.numpy as jnp
@@ -59,6 +59,11 @@ class EdgePartition:
 
     # bookkeeping for mapping answers back
     global_of_local: np.ndarray  # int32[P, n_local] global vertex id (or -1)
+
+    # per-arc slot in the flattened [P, P, B] bucket tensor, in the host
+    # Graph's arc order — the execution backends' edge_active gather/scatter
+    # map (None only on partitions built by pre-engine code)
+    arc_flat_slot: Optional[np.ndarray] = None  # int64[m]
 
     @property
     def total_slots(self) -> int:
@@ -108,6 +113,8 @@ def partition_graph(g: Graph, P: int, pad_multiple: int = 8) -> EdgePartition:
     send_dst_local[s_sh, d_sh, pos] = d_lo
     send_pad[s_sh, d_sh, pos] = False
     slot_of_arc[order] = pos
+    arc_flat_slot = np.empty(g.m, dtype=np.int64)
+    arc_flat_slot[order] = (s_sh.astype(np.int64) * P + d_sh) * B + pos
 
     # twin lookup: arc i=(u,v); twin=(v,u) lives at (dst_sh[i], src_sh[i], slot_of_twin).
     # The receiving shard for arc i's dst-side omega is shard(u)=src_sh[i]; in its recv
@@ -145,6 +152,7 @@ def partition_graph(g: Graph, P: int, pad_multiple: int = 8) -> EdgePartition:
         recv_is_start=recv_is_start, recv_last_edge=recv_last_edge,
         labels_local=labels_local, vertex_valid=vertex_valid,
         global_of_local=global_of_local,
+        arc_flat_slot=arc_flat_slot,
     )
 
 

@@ -106,8 +106,16 @@ class DeviceGraph:
         return int(self.src.shape[0])
 
     @staticmethod
-    def from_host(g: Graph) -> "DeviceGraph":
-        order = np.lexsort((g.src, g.dst))
+    def dst_sort_order(g: Graph) -> np.ndarray:
+        """The dst-sort permutation `from_host` applies — exposed so callers
+        that also need the order (e.g. the sharded backends' edge gather map)
+        compute it once and stay in sync with this layout."""
+        return np.lexsort((g.src, g.dst))
+
+    @staticmethod
+    def from_host(g: Graph, order: Optional[np.ndarray] = None) -> "DeviceGraph":
+        if order is None:
+            order = DeviceGraph.dst_sort_order(g)
         return DeviceGraph(
             n=g.n,
             src=jnp.asarray(g.src[order]),

@@ -138,6 +138,16 @@ def shape_bucket(*dims: int) -> Tuple[int, ...]:
     return tuple(out)
 
 
+def shard_bucket(P: int, *dims: int) -> Tuple:
+    """Shard-aware shape bucket for decisions made inside the sharded
+    execution backends (core/engine.py): keyed by the shard count AND the
+    shard-LOCAL dimensions (power-of-two rounded), so a tuned choice for
+    "p4 shards, 512 local vertices, wave 1024" never leaks onto a different
+    mesh decomposition of the same global graph. Renders as e.g.
+    ``p4x512x1024`` in policy-table keys."""
+    return (f"p{int(P)}",) + shape_bucket(*dims)
+
+
 def bucket_key(bucket) -> str:
     """Render a shape bucket the way policy-table keys spell it ("2048x32",
     "*", "scalar") — for reading measurements back out of a policy."""

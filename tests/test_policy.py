@@ -326,6 +326,8 @@ def test_rollup_schema_roundtrip(tmp_path):
         _minimal_rollup_suites(), "small",
         graph={"n": 2048, "m": 25316},
         phases=[{"phase": "LCC", "seconds": 0.5}],
+        sharded_prune={"P": 4, "backend": "sim", "seconds": 7.4,
+                       "matches_local": True},
         path=str(tmp_path / "BENCH_pipeline.json"),
     )
     payload = json.load(open(path))
@@ -334,6 +336,7 @@ def test_rollup_schema_roundtrip(tmp_path):
     assert payload["scale"] == "small"
     assert payload["graph"] == {"n": 2048, "m": 25316}
     assert payload["suites"]["dispatch_policy"]["ok"] is True
+    assert payload["sharded_prune"]["matches_local"] is True
     route_key = f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}"
     assert payload["policy"]["routes"][route_key]["choice"] == registry.ROUTE_PACKED
 
@@ -345,6 +348,9 @@ def test_rollup_schema_roundtrip(tmp_path):
     (lambda p: p["suites"]["dispatch_policy"].pop("seconds"),
      "missing key 'seconds'"),
     (lambda p: p["phases"].append({"seconds": 1.0}), "missing key 'phase'"),
+    (lambda p: p.update(sharded_prune={"P": 4, "seconds": 1.0}),
+     "missing key 'matches_local'"),
+    (lambda p: p.update(sharded_prune=[1]), "sharded_prune must be a dict"),
 ])
 def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
     registry.set_policy(None)

@@ -1,0 +1,321 @@
+"""Sharded execution-backend correctness (core/engine.py).
+
+The full prune() pipeline on 1/2/4/8 shards must equal the single-device
+engine BIT-FOR-BIT — omega, the edge mask, and the phase count trajectory —
+across the three template classes (cyclic, acyclic/path, TDS-bearing) and all
+three sharded NLCC wave routes (fused / packed / unpacked).
+
+The sim backend (vmap, axis-name collectives) runs in-process on one device.
+The spmd backend (shard_map + all_to_all) runs in-process when this process
+sees >= 8 devices (CI's multi-device job forces
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``) and via a subprocess
+fallback in the plain tier-1 run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import rmat_graph, partition_graph
+from repro.core import Template, prune
+from repro.kernels import registry
+
+
+# --------------------------------------------------------------- templates
+def _graph():
+    return rmat_graph(9, edge_factor=6, seed=5)
+
+
+def _cases():
+    """(name, template, prune kwargs) — one per template class of the
+    acceptance criteria. Labels chosen so every case keeps a nontrivial G*."""
+    return [
+        # CC constraints only (monocycle, unique labels, no complete TDS)
+        ("cyclic", Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)]),
+         dict(guarantee_precision=False)),
+        # acyclic, repeated labels >= 3 hops apart -> PC + union-of-paths TDS
+        ("path", Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+         dict(guarantee_precision=False)),
+        # complete-walk TDS annotation (Def. 1 zero-false-positive pipeline)
+        ("tds", Template([4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+         dict(guarantee_precision=True)),
+    ]
+
+
+def _assert_bit_identical(base, sharded, tag):
+    np.testing.assert_array_equal(base.omega, sharded.omega, err_msg=tag)
+    np.testing.assert_array_equal(base.edge_mask, sharded.edge_mask, err_msg=tag)
+    np.testing.assert_array_equal(base.vertex_mask, sharded.vertex_mask, err_msg=tag)
+    # same pruning trajectory, not just the same endpoint
+    base_traj = [(p.phase, p.active_vertices, p.active_edges, p.omega_bits)
+                 for p in base.phases]
+    sh_traj = [(p.phase, p.active_vertices, p.active_edges, p.omega_bits)
+               for p in sharded.phases]
+    assert base_traj == sh_traj, tag
+
+
+# ----------------------------------------------------------- sim backend
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+@pytest.mark.parametrize("case", _cases(), ids=lambda c: c[0])
+def test_sim_prune_parity(P, case):
+    name, tmpl, kw = case
+    g = _graph()
+    base = prune(g, tmpl, **kw)
+    assert base.counts()["V*"] > 0  # nontrivial
+    sharded = prune(g, tmpl, partition=P, **kw)
+    assert sharded.stats["backend"] == "sim"
+    assert sharded.stats["sharded"]["P"] == P
+    if name == "tds":
+        # this template generates ONLY the complete-TDS constraint: no wave
+        # ever runs, and the reported route must say so
+        assert sharded.stats["dispatch_routes"]["prune.nlcc"] == "none"
+    _assert_bit_identical(base, sharded, f"sim P={P} {name}")
+
+
+@pytest.mark.parametrize("route", [
+    registry.ROUTE_FUSED, registry.ROUTE_PACKED, registry.ROUTE_UNPACKED])
+def test_sim_wave_routes_parity_and_reporting(route):
+    """All three sharded NLCC wave routes produce identical prunes, report the
+    route actually taken, and count their waves under the right stat key."""
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    base = prune(g, tmpl)
+    pol = registry.DispatchPolicy()
+    pol.set_route("prune.nlcc", jax.default_backend(),
+                  registry.shard_bucket(4, partition_graph(g, 4).n_local, 1024),
+                  route)
+    registry.set_policy(pol)
+    try:
+        sharded = prune(g, tmpl, partition=4)
+    finally:
+        registry.set_policy(None)
+    assert sharded.stats["dispatch_routes"]["prune.nlcc"] == route
+    stat_key = {
+        registry.ROUTE_FUSED: "nlcc_fused_waves",
+        registry.ROUTE_PACKED: "nlcc_packed_waves",
+        registry.ROUTE_UNPACKED: "nlcc_plane_waves",
+    }[route]
+    waves = sum(p.extra.get(stat_key, 0) for p in sharded.phases)
+    others = sum(p.extra.get(k, 0) for p in sharded.phases
+                 for k in ("nlcc_fused_waves", "nlcc_packed_waves",
+                           "nlcc_plane_waves") if k != stat_key)
+    assert waves > 0 and others == 0
+    _assert_bit_identical(base, sharded, f"route={route}")
+
+
+def test_sim_multiplicity_counts_path():
+    """Same-label multiplicity templates exercise the counts side of the
+    sharded LCC receive aggregation."""
+    g = rmat_graph(8, edge_factor=10, seed=6)
+    lbl = int(np.bincount(g.labels).argmax())
+    tmpl = Template([lbl, lbl, lbl], [(0, 1), (0, 2)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    assert base.counts()["V*"] > 0
+    sharded = prune(g, tmpl, partition=4, guarantee_precision=False)
+    _assert_bit_identical(base, sharded, "multiplicity")
+
+
+def test_sim_wave_chunking_and_small_waves():
+    """wave= smaller than the source count forces multiple waves per walk;
+    survivors still accumulate identically on device."""
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    base = prune(g, tmpl, wave=32, guarantee_precision=False)
+    sharded = prune(g, tmpl, partition=4, wave=32, guarantee_precision=False)
+    _assert_bit_identical(base, sharded, "wave=32")
+    waves = sum(p.extra.get("nlcc_waves", 0) for p in sharded.phases)
+    consts = sum(p.extra.get("nlcc_constraints", 0) for p in sharded.phases)
+    syncs = sum(p.extra.get("nlcc_host_syncs", 0) for p in sharded.phases)
+    assert consts > 0 and waves > consts
+    # the sharded executor's host-sync contract: one per constraint
+    assert syncs == consts
+
+
+def test_sharded_fused_gate_composes_with_shard_local_shapes(monkeypatch):
+    """A tuned `fused` choice whose shard-local resident state exceeds the
+    bitset_wave budget falls back to the packed per-hop route."""
+    from repro.core import engine
+    from repro.kernels import ops as kops
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    pol = registry.DispatchPolicy()
+    pol.set_route("prune.nlcc", jax.default_backend(), registry.BUCKET_ANY,
+                  registry.ROUTE_FUSED)
+    registry.set_policy(pol)
+    monkeypatch.setattr(kops, "BITSET_WAVE_VMEM_BUDGET", 1)
+    try:
+        assert not engine.sharded_fused_eligible(64, 4, 8, 1024, 3)
+        sharded = prune(g, tmpl, partition=4)
+    finally:
+        registry.set_policy(None)
+    assert sharded.stats["dispatch_routes"]["prune.nlcc"] == registry.ROUTE_PACKED
+    base = prune(g, tmpl)
+    _assert_bit_identical(base, sharded, "gated fallback")
+
+
+def test_shard_bucket_keys():
+    b = registry.shard_bucket(4, 500, 1024)
+    assert b == ("p4", 512, 1024)
+    assert registry.bucket_key(b) == "p4x512x1024"
+    # distinct decompositions of the same global graph never share decisions
+    assert registry.shard_bucket(8, 500, 1024) != b
+
+
+def test_sharded_rejects_local_only_knobs():
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    with pytest.raises(ValueError, match="local backend"):
+        prune(g, tmpl, partition=2, force_pallas=True)
+    with pytest.raises(ValueError, match="local-backend-only"):
+        prune(g, tmpl, partition=2, edge_elimination=False)
+
+
+def test_sim_edge_prune_parity_and_change_flag():
+    """nlcc_edge_prune composes with the sharded backends through the bridge,
+    and an edge-ONLY elimination (omega unchanged) still triggers the
+    post-constraint LCC re-run — the change flag watches edge_active too.
+
+    Construction: two disjoint labeled 4-cycles plus a label-compatible chord
+    between them. Every vertex keeps its candidacy (it sits on its own
+    cycle), but the chord lies on no completing 4-cycle, so the frontier
+    edge-prune pass eliminates it while omega is untouched."""
+    from repro.graph.structs import Graph
+
+    pairs = [(0, 1), (1, 2), (2, 3), (3, 0),
+             (4, 5), (5, 6), (6, 7), (7, 4),
+             (0, 5)]  # the chord: label-compatible, on no injective 4-cycle
+    g = Graph.from_undirected_pairs(8, pairs, [0, 1, 0, 1, 0, 1, 0, 1])
+    tmpl = Template([0, 1, 0, 1], [(0, 1), (1, 2), (2, 3), (3, 0)])
+    base = prune(g, tmpl, nlcc_edge_prune=True, guarantee_precision=True)
+    # the chord's arcs die (here via the complete-TDS exact edge set) while
+    # every vertex keeps its candidacy — an edge-only elimination
+    assert base.counts() == {"V*": 8, "E*": 16}
+    sharded = prune(g, tmpl, partition=2, nlcc_edge_prune=True,
+                    guarantee_precision=True)
+    _assert_bit_identical(base, sharded, "edge_prune")
+
+
+def test_sharded_change_flag_sees_edge_only_elimination(monkeypatch):
+    """Regression: the sharded nlcc() change flag must watch edge_active, not
+    just omega — an edge-prune-bridge elimination that leaves omega untouched
+    still has to trigger the post-constraint LCC re-run."""
+    import jax.numpy as jnp
+    from repro.core import engine
+    from repro.core import nlcc as nlcc_mod
+    from repro.core.state import PruneState
+    from repro.core.template import generate_constraints
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    # empty candidacy: no wave ever runs, so the ONLY state difference the
+    # constraint can produce is the bridge's edge elimination
+    empty = PruneState(
+        omega=jnp.zeros((g.n, tmpl.n0), bool),
+        edge_active=jnp.ones((g.m,), bool))
+
+    def edge_only_prune(dg, state, c, template, wave, stats):
+        ea = np.asarray(state.edge_active).copy()
+        ea[np.flatnonzero(ea)[0]] = False
+        return PruneState(omega=state.omega, edge_active=jnp.asarray(ea))
+
+    monkeypatch.setattr(nlcc_mod, "_edge_prune_pass", edge_only_prune)
+    backend = engine.make_backend(g, tmpl, partition=2, nlcc_edge_prune=True)
+    backend.init(empty)
+    c = [c for c in generate_constraints(tmpl, guarantee_precision=False)
+         if c.kind == "cycle"][0]
+    changed = backend.nlcc(c, {})
+    after = backend.gather_state()
+    assert not np.asarray(after.omega).any()  # omega untouched (still empty)
+    assert int(np.asarray(after.edge_active).sum()) == g.m - 1
+    assert bool(changed)  # edge-only change MUST re-trigger LCC
+
+
+def test_sharded_initial_state_roundtrip():
+    """initial_state= scatters onto the shards and gathers back losslessly —
+    resuming an interrupted prune works across backends."""
+    g = _graph()
+    tmpl = Template([4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    resumed = prune(g, tmpl, partition=4, guarantee_precision=False,
+                    initial_state=base.state)
+    np.testing.assert_array_equal(base.omega, resumed.omega)
+    np.testing.assert_array_equal(
+        np.asarray(base.state.edge_active), np.asarray(resumed.state.edge_active))
+
+
+# ---------------------------------------------------------- spmd backend
+_needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="spmd in-process tests need 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@_needs_devices
+@pytest.mark.parametrize("case", _cases(), ids=lambda c: c[0])
+def test_spmd_prune_parity_8_devices(case):
+    from repro.launch.mesh import make_shard_mesh
+
+    name, tmpl, kw = case
+    g = _graph()
+    base = prune(g, tmpl, **kw)
+    mesh = make_shard_mesh(8)
+    sharded = prune(g, tmpl, mesh=mesh, **kw)
+    assert sharded.stats["backend"] == "spmd"
+    _assert_bit_identical(base, sharded, f"spmd {name}")
+
+
+@_needs_devices
+def test_spmd_partition_coarser_than_mesh_rejected():
+    from repro.launch.mesh import make_shard_mesh
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    with pytest.raises(ValueError, match="shards"):
+        prune(g, tmpl, mesh=make_shard_mesh(8), partition=partition_graph(g, 4))
+
+
+SPMD_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.graph import rmat_graph
+    from repro.core import Template, prune
+    from repro.launch.mesh import make_shard_mesh
+
+    g = rmat_graph(9, edge_factor=6, seed=5)
+    mesh = make_shard_mesh(8)
+    for name, tmpl, kw in [
+        ("cyclic", Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)]),
+         dict(guarantee_precision=False)),
+        ("tds", Template([4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+         dict(guarantee_precision=True)),
+    ]:
+        base = prune(g, tmpl, **kw)
+        sh = prune(g, tmpl, mesh=mesh, **kw)
+        assert np.array_equal(base.omega, sh.omega), name
+        assert np.array_equal(base.edge_mask, sh.edge_mask), name
+        assert sh.stats["backend"] == "spmd", sh.stats
+    print("SPMD_PRUNE_OK")
+    """
+)
+
+
+def test_spmd_prune_subprocess_8_devices():
+    """The tier-1 guarantee that the real shard_map path works even when this
+    process only sees one device."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src")
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", SPMD_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "SPMD_PRUNE_OK" in r.stdout

@@ -102,6 +102,48 @@ def test_single_vertex_template():
     assert res.counts()["V*"] == 4
 
 
+def test_phase_snapshots_defer_host_syncs(monkeypatch):
+    """Phase snapshots accumulate device-side: without collect_stats, the
+    per-phase counts never call the blocking PruneState.counts() mid-run —
+    they materialize once at the end — and the numbers still match the eager
+    (collect_stats=True) path exactly."""
+    from repro.core.state import PruneState
+
+    g = gen.erdos_renyi_graph(120, 5.0, seed=2, n_labels=3)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+
+    calls = {"counts": 0}
+    real_counts = PruneState.counts
+
+    def counting_counts(self):
+        calls["counts"] += 1
+        return real_counts(self)
+
+    monkeypatch.setattr(PruneState, "counts", counting_counts)
+    lazy = prune(g, tmpl)
+    assert calls["counts"] == 0  # no blocking count reads on the hot path
+    eager = prune(g, tmpl, collect_stats=True)
+    assert calls["counts"] > 0  # eager snapshots preserved under collect_stats
+    assert [
+        (p.phase, p.active_vertices, p.active_edges, p.omega_bits)
+        for p in lazy.phases
+    ] == [
+        (p.phase, p.active_vertices, p.active_edges, p.omega_bits)
+        for p in eager.phases
+    ]
+
+
+def test_prune_result_masks_are_cached():
+    """vertex_mask / edge_mask / omega materialize device arrays once and are
+    cached — benchmarks and enumeration hit edge_mask repeatedly."""
+    g = gen.erdos_renyi_graph(120, 5.0, seed=2, n_labels=3)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl)
+    assert res.omega is res.omega
+    assert res.vertex_mask is res.vertex_mask
+    assert res.edge_mask is res.edge_mask
+
+
 def test_enumeration_chunk_recovers_after_overflow(monkeypatch):
     """A TdsOverflow must shrink only the overflowing wave: subsequent source
     chunks grow back toward the configured chunk instead of staying tiny for
