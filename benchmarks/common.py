@@ -121,6 +121,14 @@ def validate_rollup(payload: Dict) -> None:
         need(sp, "P", int, "sharded_prune")
         need(sp, "seconds", (int, float), "sharded_prune")
         need(sp, "matches_local", bool, "sharded_prune")
+    if "enumeration" in payload:  # additive (PR 5): enumeration-engine point
+        en = payload["enumeration"]
+        if not isinstance(en, dict):
+            raise ValueError("roll-up enumeration must be a dict")
+        need(en, "count_seconds", (int, float), "enumeration")
+        need(en, "materialize_seconds", (int, float), "enumeration")
+        need(en, "n_embeddings", int, "enumeration")
+        need(en, "count_matches_materialize", bool, "enumeration")
 
 
 def write_rollup(
@@ -131,6 +139,7 @@ def write_rollup(
     phases: Optional[List[Dict]] = None,
     nlcc_wave: Optional[Dict] = None,
     sharded_prune: Optional[Dict] = None,
+    enumeration: Optional[Dict] = None,
     policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
 ) -> str:
@@ -145,6 +154,11 @@ def write_rollup(
     sharded_prune  {"P": ..., "seconds": ..., "matches_local": ...} — the
     sharded end-to-end prune point from benchmarks/strong_scaling.py
     (additive, PR 4)
+    enumeration  {"count_seconds": ..., "materialize_seconds": ...,
+    "n_embeddings": ..., "count_matches_materialize": ...} — the
+    enumeration-engine point (counting fast path vs materialize-then-unique)
+    from benchmarks/dispatch_policy.py (additive, PR 5; the CI smoke job
+    gates the count/materialize ratio)
     policy_fallback  a previously recorded "policy" block to keep when NO
     policy is active in the registry (partial --only runs on untuned
     checkouts must not wipe the committed tuning trajectory)
@@ -170,6 +184,8 @@ def write_rollup(
         payload["nlcc_wave"] = dict(nlcc_wave)
     if sharded_prune:
         payload["sharded_prune"] = dict(sharded_prune)
+    if enumeration:
+        payload["enumeration"] = dict(enumeration)
     validate_rollup(payload)
     out = path or rollup_path()
     with open(out, "w") as f:

@@ -32,13 +32,14 @@ from repro.core.nlcc import (
     NLCC_ROUTE, check_walk_constraint, check_walk_constraint_fused,
     check_walk_constraint_packed, nlcc_route_bucket,
 )
+from repro.core.enumerate import ENUM_ROUTE, enumerate_matches
 from repro.core.pipeline import prune
 from repro.core.state import init_state, pack_bits
 from repro.core.template import Template
 from repro.graph.blocked import build_blocked_structure
 from repro.graph.structs import DeviceGraph
 from repro.kernels import registry
-from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save, timer
 
 WAVE = 1024  # prune()'s default NLCC wave width
 
@@ -107,8 +108,41 @@ def run(scale: str = "small") -> Dict:
         }),
     ]
 
+    # --- enumeration-join routes: host numpy join vs the device-resident
+    # join, per result mode, on the pruned T4-square-rare graph (|Aut| = 2 —
+    # the symmetry restrictions actually fire in count mode)
+    enum_labels, enum_edges = WDC_LIKE_TEMPLATES["T4-square-rare"]
+    enum_tmpl = Template(enum_labels, enum_edges)
+    enum_res = prune(g, enum_tmpl)
+    for mode in ("materialize", "count"):
+        routes.append((ENUM_ROUTE, ("local", mode), {
+            registry.ROUTE_HOST: lambda m=mode: enumerate_matches(
+                enum_res, mode=m, route="host").n_embeddings,
+            registry.ROUTE_DEVICE: lambda m=mode: enumerate_matches(
+                enum_res, mode=m, route="device").n_embeddings,
+        }))
+
     policy = registry.tune(cases=cases, routes=routes, repeat=3)
     nlcc_entry = policy.route_entry_for(NLCC_ROUTE, backend, nlcc_bucket)
+
+    # --- the enumeration-engine trajectory point: counting fast path
+    # (symmetry-broken in-flight, rows never materialized) vs the classic
+    # materialize-then-unique, under the tuned routing
+    mat, t_mat = timer(
+        lambda: enumerate_matches(enum_res), repeat=3)
+    cnt, t_cnt = timer(
+        lambda: enumerate_matches(enum_res, mode="count"), repeat=3)
+    enumeration = {
+        "template": "T4-square-rare",
+        "count_seconds": t_cnt,
+        "materialize_seconds": t_mat,
+        "n_embeddings": int(mat.n_embeddings),
+        "automorphisms": int(cnt.automorphisms),
+        "n_canonical": int(cnt.n_canonical),
+        "count_route": cnt.route,
+        "materialize_route": mat.route,
+        "count_matches_materialize": bool(cnt.n_embeddings == mat.n_embeddings),
+    }
 
     # --- end-to-end: full prune per WDC template under the tuned policy
     patterns: Dict[str, Dict] = {}
@@ -142,6 +176,9 @@ def run(scale: str = "small") -> Dict:
             "choice": nlcc_entry.choice,
             "measured_s": dict(nlcc_entry.measured_s),
         },
+        # counting fast path vs materialize-then-unique (the enumeration
+        # analogue of the nlcc_wave point; gated by the CI smoke job)
+        "enumeration": enumeration,
         "decisions": {
             "modes": {k: e.choice for k, e in policy.modes.items()},
             "routes": {k: e.choice for k, e in policy.routes.items()},

@@ -92,7 +92,7 @@ def main(argv=None):
                 suites = {**prev.get("suites", {}), **suites}
                 carried = {k: prev.get(k)
                            for k in ("graph", "phases", "nlcc_wave",
-                                     "sharded_prune", "policy")}
+                                     "sharded_prune", "enumeration", "policy")}
         path = common.write_rollup(
             suites, args.scale,
             graph=dp.get("graph") or carried.get("graph"),
@@ -100,6 +100,7 @@ def main(argv=None):
             nlcc_wave=dp.get("nlcc_wave") or carried.get("nlcc_wave"),
             sharded_prune=(payloads.get("strong_scaling", {}).get("sharded_prune")
                            or carried.get("sharded_prune")),
+            enumeration=dp.get("enumeration") or carried.get("enumeration"),
             policy_fallback=carried.get("policy"),
         )
         print(f"roll-up -> {path}")

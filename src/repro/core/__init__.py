@@ -11,7 +11,10 @@ from repro.core.pipeline import prune, PruneResult
 from repro.core.engine import (
     LocalBackend, SimBackend, SpmdBackend, make_backend,
 )
-from repro.core.enumerate import enumerate_matches, EnumerationResult, template_walk
+from repro.core.enumerate import (
+    enumerate_matches, count_matches, stream_matches, EnumerationResult,
+    template_walk,
+)
 from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
 
 __all__ = [
@@ -32,6 +35,8 @@ __all__ = [
     "SpmdBackend",
     "make_backend",
     "enumerate_matches",
+    "count_matches",
+    "stream_matches",
     "EnumerationResult",
     "template_walk",
     "enumerate_matches_bruteforce",

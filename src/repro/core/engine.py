@@ -862,6 +862,17 @@ class _ShardedBackend:
             f = hop_fn(self.arrs, self.ea_all, f, cand[:, r])
         return finish_fn(f, keep_col, ids_dev)
 
+    # -- enumeration join ---------------------------------------------------
+    def join_context(self):
+        """Context for the device-resident enumeration join (core/join.py):
+        the join programs run through this backend's program wrapper (vmap /
+        shard_map) against the partition's join plan, reading the
+        device-resident omega_all / ea_all directly — the reduced subgraph is
+        never gathered to the host for enumeration."""
+        from repro.core import join as join_mod
+
+        return join_mod.ShardedJoinContext(self)
+
     # -- TDS (gather bridge) ------------------------------------------------
     def tds(self, c: NonLocalConstraint, cstats: Dict):
         from repro.core import tds as tds_mod

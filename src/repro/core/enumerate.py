@@ -1,32 +1,70 @@
-"""Full match enumeration and counting on the pruned solution subgraph (§4).
+"""Full match enumeration, counting, and streaming on the pruned solution
+subgraph (§4).
 
 Per the paper: "Alg. 6 can be slightly modified to obtain the enumeration of
 the matches: the constraint used is the full template, work aggregation is
-turned off, and each possible match is verified." Here the TDS join already
-keeps one row per distinct partial assignment, so 'work aggregation off'
-simply means *collect completed rows* instead of reducing them to an
-existence bit. The per-vertex match lists omega collected during pruning
-accelerate the join (candidacy filters), exactly as in the paper.
+turned off, and each possible match is verified." The join engines
+(core/join.py) realize this as a row-table walk over the complete edge-cover
+walk of the template; the per-vertex match lists omega collected during
+pruning accelerate the join (candidacy filters), exactly as in the paper.
+
+Three result modes:
+  materialize  the classic full enumeration: every embedding as a row of
+               `EnumerationResult.embeddings` (template-vertex column order).
+  count        the counting fast path: completion counts only, rows are never
+               materialized host-side; symmetry restrictions derived from the
+               template's automorphism group (GraphPi-style, see
+               `Template.symmetry_restrictions`) are enforced IN-FLIGHT, so
+               the join does 1/|Aut| of the work and needs no post-hoc
+               `np.unique` — `n_embeddings` is reported exactly as
+               restricted_count * |Aut|.
+  stream       `stream_matches`: a generator of embedding blocks under a
+               fixed row budget (bounded memory, Choudhury et al.-style
+               continuous emission).
+
+Two join routes serve every mode, resolved through the kernel registry's
+dispatch policy (route name ``enumerate.join``, buckets
+``<local|sharded>x<mode>``):
+  host    the numpy row-table join over the compacted active subgraph.
+  device  the device-resident join (core/join.py) — on a sharded PruneResult
+          (prune(..., mesh=/partition=)) it runs against the backend's
+          device-resident shard arrays directly: the reduced subgraph is
+          NEVER materialized on the host before the join.
+
+On a TdsOverflow that survives chunk back-off to a single source, the
+enumeration falls back to the streaming emitter for that source instead of
+raising out of an otherwise-valid run.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.graph.structs import DeviceGraph
 from repro.core.state import PruneState
 from repro.core.template import Template, _edge_cover_walk
 from repro.core.tds import compact_active, tds_walk, TdsOverflow
+from repro.core import join as join_mod
+
+# dispatch-policy route name for the enumeration join (host vs device),
+# bucketed by backend kind and result mode: "<local|sharded>x<mode>"
+ENUM_ROUTE = "enumerate.join"
+
+MODE_MATERIALIZE = "materialize"
+MODE_COUNT = "count"
+MODE_STREAM = "stream"
 
 
 @dataclasses.dataclass
 class EnumerationResult:
     embeddings: np.ndarray  # int32[count, n0]: column q = background vertex for q
     n_embeddings: int
-    n_distinct_vertex_sets: int
+    n_distinct_vertex_sets: int  # -1 in count mode (needs materialized rows)
     automorphisms: int
+    mode: str = MODE_MATERIALIZE
+    route: str = "host"
+    n_canonical: Optional[int] = None  # symmetry-restricted row count, if broken
 
     @property
     def n_matches_up_to_automorphism(self) -> float:
@@ -44,47 +82,271 @@ def template_walk(template: Template, label_freq: Optional[np.ndarray] = None):
 
 
 def count_automorphisms(template: Template) -> int:
-    """Enumerate the template against itself (tiny)."""
-    from repro.core.oracle import enumerate_matches_bruteforce
+    """|Aut(T)| — cached on the template (orbit-refined backtracking search,
+    `Template.automorphisms`; the old path re-ran a brute-force
+    self-enumeration on every call)."""
+    return max(template.automorphism_count(), 1)
 
-    res = enumerate_matches_bruteforce(template.to_graph(), template)
-    return max(len(res), 1)
+
+def _resolve_route(kind: str, mode: str, route: Optional[str]) -> str:
+    from repro.kernels import registry
+
+    if route is not None:
+        if route not in (registry.ROUTE_HOST, registry.ROUTE_DEVICE):
+            raise ValueError(f"unknown enumerate.join route {route!r}")
+        if kind == "sharded" and route == registry.ROUTE_HOST:
+            raise ValueError(
+                "the sharded enumeration join is device-resident; route="
+                "'host' would gather the reduced subgraph")
+        return route
+    if kind == "sharded":
+        # always device-resident: the whole point is never gathering G*
+        return registry.ROUTE_DEVICE
+    return registry.resolve_route(
+        ENUM_ROUTE, (kind, mode), default=registry.ROUTE_HOST,
+        allowed=(registry.ROUTE_HOST, registry.ROUTE_DEVICE))
+
+
+def _unpack_args(dg, state, template, backend):
+    """Accept either (dg, state, template) or a PruneResult first argument —
+    a sharded PruneResult carries its execution backend, which the device
+    join enumerates against with no gather of the reduced subgraph."""
+    if state is None and hasattr(dg, "dg") and hasattr(dg, "state"):
+        result = dg
+        if template is None:
+            template = result.template
+        if backend is None:
+            backend = getattr(result, "backend", None)
+        return result.dg, result.state, template, backend
+    return dg, state, template, backend
+
+
+def _backend_kind(backend) -> str:
+    return ("sharded"
+            if backend is not None and getattr(backend, "name", "local")
+            in ("sim", "spmd", "sharded") else "local")
+
+
+def _make_engine(route, kind, dg, state, template, walk, max_rows,
+                 symmetry_break, backend, stats):
+    from repro.kernels import registry
+
+    if route == registry.ROUTE_DEVICE:
+        ctx = (backend.join_context() if kind == "sharded"
+               else join_mod.LocalJoinContext(dg, state))
+        return join_mod.DeviceJoin(ctx, template, walk, max_rows,
+                                   symmetry_break=symmetry_break, stats=stats)
+    sub = compact_active(dg, state)
+    return join_mod.HostJoin(sub, template, walk, max_rows,
+                             symmetry_break=symmetry_break, stats=stats)
+
+
+def _run_engine(engine, chunk: int, max_rows: int, count_only: bool,
+                stats: Optional[Dict]):
+    """Chunked source loop with overflow back-off shared by the engine-based
+    paths; at cur_chunk == 1 an overflowing source falls back to the
+    streaming emitter (bounded memory) instead of raising."""
+    sources = engine.sources()
+    blocks = []
+    total = 0
+    off, cur_chunk = 0, chunk
+    while off < sources.size:
+        ids = sources[off: off + cur_chunk]
+        try:
+            rows = engine.seed(ids)
+            for r in range(1, len(engine.steps) + 1):
+                if engine.nrows(rows) == 0:
+                    break
+                rows = engine.step(rows, r)
+            if engine.nrows(rows):
+                if count_only:
+                    total += engine.count(rows)
+                else:
+                    blocks.append(engine.emit(rows))
+        except TdsOverflow:
+            if cur_chunk == 1:
+                # streaming fallback: finish this source depth-first under
+                # the same row budget instead of aborting the enumeration
+                if stats is not None:
+                    stats["enum_stream_fallbacks"] = (
+                        stats.get("enum_stream_fallbacks", 0) + 1)
+                for blk in join_mod.stream_join(engine, ids, 1, max_rows):
+                    if count_only:
+                        total += blk.shape[0]
+                    else:
+                        blocks.append(blk)
+                off += ids.size
+                continue
+            cur_chunk = max(1, cur_chunk // 4)  # paper's rate control
+            continue
+        off += ids.size
+        if cur_chunk < chunk:  # recover toward the configured chunk
+            cur_chunk = min(chunk, cur_chunk * 2)
+    return total, blocks
 
 
 def enumerate_matches(
-    dg: DeviceGraph,
-    state: PruneState,
-    template: Template,
+    dg,
+    state: Optional[PruneState] = None,
+    template: Optional[Template] = None,
     label_freq: Optional[np.ndarray] = None,
     chunk: int = 4096,
     max_rows: int = 5_000_000,
     stats: Optional[Dict] = None,
+    *,
+    mode: str = MODE_MATERIALIZE,
+    symmetry_break: Optional[bool] = None,
+    route: Optional[str] = None,
+    backend=None,
 ) -> EnumerationResult:
+    """Enumerate (or count) all template embeddings in the pruned graph.
+
+    `dg` may be a `PruneResult` (then `state`/`template` default from it);
+    a sharded result routes onto the device-resident join automatically.
+    `mode` is "materialize" (default) or "count"; `symmetry_break` defaults
+    to True exactly in count mode. `route` pins "host"/"device" (tests);
+    otherwise the dispatch policy decides for the local backend.
+    """
+    from repro.kernels import registry
+
+    dg, state, template, backend = _unpack_args(dg, state, template, backend)
+    if mode not in (MODE_MATERIALIZE, MODE_COUNT):
+        raise ValueError(f"unknown enumeration mode {mode!r}")
+    aut = count_automorphisms(template)
     if template.n0 == 1:
         verts = np.flatnonzero(np.asarray(state.omega)[:, 0])
         emb = verts.astype(np.int32).reshape(-1, 1)
+        if mode == MODE_COUNT:
+            return EnumerationResult(
+                np.zeros((0, 1), np.int32), emb.shape[0], -1, 1,
+                mode=mode, route="host")
         return EnumerationResult(emb, emb.shape[0], emb.shape[0], 1)
 
-    sub = compact_active(dg, state)
+    kind = _backend_kind(backend)
+    route = _resolve_route(kind, mode, route)
+    sb = symmetry_break if symmetry_break is not None else (mode == MODE_COUNT)
+    if stats is not None:
+        stats["enumerate_route"] = route
+        stats["enumerate_mode"] = mode
     walk = template_walk(template, label_freq)
+
+    if (mode == MODE_MATERIALIZE and not sb
+            and route == registry.ROUTE_HOST):
+        # the legacy single-host materialize join (per-chunk tds_walk with
+        # the same back-off/recovery loop), kept as the host route
+        return _materialize_host_legacy(
+            dg, state, template, walk, chunk, max_rows, stats, aut)
+
+    engine = _make_engine(route, kind, dg, state, template, walk, max_rows,
+                          sb, backend, stats)
+    total, blocks = _run_engine(engine, chunk, max_rows,
+                                count_only=(mode == MODE_COUNT), stats=stats)
+    if mode == MODE_COUNT:
+        n_emb = total * aut if sb else total
+        return EnumerationResult(
+            np.zeros((0, template.n0), np.int32), n_emb, -1, aut,
+            mode=mode, route=route, n_canonical=(total if sb else None))
+    if blocks:
+        emb = np.unique(np.concatenate(blocks, axis=0), axis=0)
+    else:
+        emb = np.zeros((0, template.n0), np.int32)
+    vsets = np.unique(np.sort(emb, axis=1), axis=0)
+    n_emb = emb.shape[0] * aut if sb else emb.shape[0]
+    return EnumerationResult(
+        embeddings=emb,
+        n_embeddings=n_emb,
+        n_distinct_vertex_sets=vsets.shape[0],
+        automorphisms=aut,
+        mode=mode, route=route,
+        n_canonical=(emb.shape[0] if sb else None),
+    )
+
+
+def count_matches(dg, state=None, template=None, **kw) -> EnumerationResult:
+    """The counting-only fast path: `enumerate_matches(..., mode="count")` —
+    symmetry-broken in-flight, rows never materialized."""
+    return enumerate_matches(dg, state, template, mode=MODE_COUNT, **kw)
+
+
+def stream_matches(
+    dg,
+    state: Optional[PruneState] = None,
+    template: Optional[Template] = None,
+    label_freq: Optional[np.ndarray] = None,
+    chunk: int = 4096,
+    max_rows: int = 1_000_000,
+    stats: Optional[Dict] = None,
+    *,
+    symmetry_break: bool = False,
+    route: Optional[str] = None,
+    backend=None,
+) -> Iterator[np.ndarray]:
+    """Stream embedding blocks (int32[k, n0], template-vertex column order)
+    under a fixed `max_rows` budget instead of materializing every match:
+    source chunks are walked depth-first, row blocks split before each
+    expansion (core/join.py `stream_join`). Bounded memory — the whole-result
+    row table never exists at once."""
+    dg, state, template, backend = _unpack_args(dg, state, template, backend)
+    if template.n0 == 1:
+        verts = np.flatnonzero(np.asarray(state.omega)[:, 0]).astype(np.int32)
+        for off in range(0, verts.size, max(max_rows, 1)):
+            yield verts[off: off + max_rows].reshape(-1, 1)
+        return
+    kind = _backend_kind(backend)
+    route = _resolve_route(kind, MODE_STREAM, route)
+    if stats is not None:
+        stats["enumerate_route"] = route
+        stats["enumerate_mode"] = MODE_STREAM
+    walk = template_walk(template, label_freq)
+    engine = _make_engine(route, kind, dg, state, template, walk, max_rows,
+                          symmetry_break, backend, stats)
+    yield from join_mod.stream_join(engine, engine.sources(), chunk, max_rows)
+
+
+def _materialize_host_legacy(dg, state, template, walk, chunk, max_rows,
+                             stats, aut) -> EnumerationResult:
+    # Kept separate from _run_engine on purpose: the host materialize default
+    # must keep issuing module-level `tds_walk` calls per source chunk — that
+    # call contract (and the exact back-off/recovery sequence) is pinned by
+    # tests monkeypatching it, and the per-step np.unique dedup inside
+    # tds_walk is part of the measured legacy baseline the `enumeration`
+    # roll-up point compares the counting fast path against.
+    sub = compact_active(dg, state)
     q0 = walk[0]
     sources = np.flatnonzero(sub.omega[:, q0])
     all_rows = []
-    seen_q = None
+    # first-visit column order, derived from the walk itself: a chunk whose
+    # rows empty mid-walk returns a TRUNCATED seen_q from tds_walk, so the
+    # last chunk's value must never drive the column permutation
+    _, seen_q = join_mod.walk_steps(walk)
     off, cur_chunk = 0, chunk
     while off < sources.size:
         ids = sources[off : off + cur_chunk]
         try:
-            _, rows, seen_q = tds_walk(
+            _, rows, _ = tds_walk(
                 sub, walk, ids, max_rows=max_rows, collect_rows=True, stats=stats
             )
         except TdsOverflow:
             if cur_chunk == 1:
-                raise
+                # streaming fallback for this source (satellite of the
+                # device-resident engine PR): bounded-memory DFS instead of
+                # raising out of an otherwise-valid enumeration
+                if stats is not None:
+                    stats["enum_stream_fallbacks"] = (
+                        stats.get("enum_stream_fallbacks", 0) + 1)
+                engine = join_mod.HostJoin(sub, template, walk, max_rows,
+                                           stats=stats)
+                for blk in join_mod.stream_join(engine, ids, 1, max_rows):
+                    # blk is already in template-vertex column order; convert
+                    # to the walk's seen order used below
+                    if blk.shape[0]:
+                        all_rows.append((blk, True))
+                off += ids.size
+                continue
             cur_chunk = max(1, cur_chunk // 4)
             continue
         if rows is not None and rows.shape[0]:
-            all_rows.append(rows)
+            all_rows.append((rows, False))
         off += ids.size
         # a TdsOverflow quarters cur_chunk (back off fast); each successful
         # wave doubles it back toward the configured chunk so one dense
@@ -94,17 +356,17 @@ def enumerate_matches(
 
     if not all_rows:
         emb = np.zeros((0, template.n0), np.int32)
-        return EnumerationResult(emb, 0, 0, count_automorphisms(template))
+        return EnumerationResult(emb, 0, 0, aut)
 
-    rows = np.concatenate(all_rows, axis=0)
-    # reorder columns from first-visit order to template vertex order
     col_of_q = {q: c for c, q in enumerate(seen_q)}
-    emb = rows[:, [col_of_q[q] for q in range(template.n0)]]
-    emb = np.unique(emb, axis=0)
+    perm = [col_of_q[q] for q in range(template.n0)]
+    parts = [rows if in_template_order else rows[:, perm]
+             for rows, in_template_order in all_rows]
+    emb = np.unique(np.concatenate(parts, axis=0), axis=0)
     vsets = np.unique(np.sort(emb, axis=1), axis=0)
     return EnumerationResult(
         embeddings=emb,
         n_embeddings=emb.shape[0],
         n_distinct_vertex_sets=vsets.shape[0],
-        automorphisms=count_automorphisms(template),
+        automorphisms=aut,
     )

@@ -1,0 +1,538 @@
+"""Match-enumeration join engines over the pruned solution subgraph (§4).
+
+Two engines run the same constrained-walk join (expand the frontier column
+along active arcs; filter by omega-candidacy, injectivity, revisit-edge
+existence, and GraphPi-style symmetry restrictions):
+
+  HostJoin    the numpy row-table join over the compacted active subgraph
+              (`core/tds.py` step primitives) — the single-host path.
+  DeviceJoin  jnp programs written against the execution-backend prims
+              (core/engine.py): the row table is REPLICATED across shards,
+              each expansion slot is produced by exactly one shard (the owner
+              of the frontier vertex expands over its shard-local CSR arcs),
+              and the per-slot results are psum-combined — the only
+              collectives are psum (slot exchange + completion counts) and
+              the once-per-join psum all-gather of the walk's candidacy
+              columns ("frontier columns") from their owner shards. With
+              `local_prims` (P=1, identity collectives) the same programs are
+              the single-device device-resident join.
+
+Both engines share the slot layout: expansion capacity comes from STATIC
+per-vertex degrees and arcs are ordered by (src, dst-global), so the row
+tables agree row-for-row between the local plan and any shard count — the
+basis of the sharded-vs-local enumeration bit-parity suite.
+
+Walk-step metadata (`walk_steps`) attaches each symmetry restriction
+phi(a) < phi(b) (template.symmetry_restrictions) to the join step that
+assigns the later of the two vertices, so restricted counting needs no
+post-hoc dedup: restricted_count * |Aut| == the embedding count.
+
+`stream_join` is the bounded-memory streaming emitter: a depth-first walk
+over row blocks, splitting each block before expansion so no step's output
+exceeds the row budget (single rows whose fan-out alone exceeds the budget
+are the only exception); completed blocks are yielded to the caller instead
+of materializing every row at once.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graph.structs import DeviceGraph
+from repro.core.state import PruneState
+from repro.core.template import Template
+from repro.core import tds as tds_mod
+from repro.core.tds import ActiveSubgraph, TdsOverflow
+
+
+# --------------------------------------------------------------- walk steps
+@dataclasses.dataclass(frozen=True)
+class JoinStep:
+    kind: str  # "expand" | "revisit"
+    c_prev: int  # row column holding the frontier vertex
+    c_tgt: int  # expand: the new column's index; revisit: the target column
+    q_next: int  # template vertex this step lands on
+    n_cols: int  # columns assigned before this step (injectivity scope)
+    restr: Tuple[Tuple[int, str], ...] = ()  # (col, "gt"/"lt") checks vs new vertex
+
+    def key(self) -> Tuple:
+        return (self.kind, self.c_prev, self.c_tgt, self.n_cols, self.restr)
+
+
+def walk_steps(
+    walk: Sequence[int],
+    restrictions: Tuple[Tuple[int, int], ...] = (),
+) -> Tuple[List[JoinStep], List[int]]:
+    """Per-step join metadata for a walk. Each restriction pair (a, b) —
+    phi(a) < phi(b) — is checked at the step that assigns the LATER of the
+    two vertices (the earlier one is then a bound row column), so a walk
+    covering every template vertex enforces every restriction in-flight.
+    Returns (steps, seen_q = template vertices in first-visit order)."""
+    seen: List[int] = [walk[0]]
+    steps: List[JoinStep] = []
+    for r in range(1, len(walk)):
+        q_prev, q_next = walk[r - 1], walk[r]
+        c_prev = seen.index(q_prev)
+        if q_next in seen:
+            steps.append(JoinStep("revisit", c_prev, seen.index(q_next),
+                                  q_next, len(seen)))
+        else:
+            checks = []
+            for a, b in restrictions:
+                if q_next == b and a in seen:
+                    checks.append((seen.index(a), "gt"))
+                elif q_next == a and b in seen:
+                    checks.append((seen.index(b), "lt"))
+            steps.append(JoinStep("expand", c_prev, len(seen), q_next,
+                                  len(seen), tuple(checks)))
+            seen.append(q_next)
+    return steps, seen
+
+
+def _pow2(x: int) -> int:
+    b = 1
+    while b < x:
+        b <<= 1
+    return b
+
+
+# -------------------------------------------------- per-shard join programs
+def _prims(axis_name: Optional[str]):
+    from repro.core import engine as engine_mod
+
+    return (engine_mod.axis_prims(axis_name) if axis_name
+            else engine_mod.local_prims())
+
+
+def _expand_program(axis_name: Optional[str], step: JoinStep, n_local: int):
+    """One expansion step: slot t belongs to (parent row, within-frontier arc
+    j); the frontier vertex's owner shard reads the arc from its local CSR,
+    applies every filter, and contributes (vertex, keep) to the psum — all
+    other shards contribute zeros, so the psum IS the owner-shard exchange."""
+
+    def program(plan, arc_active, cand_col, deg, rows, parent, j):
+        prims = _prims(axis_name)
+        p = prims.axis_index()
+        A = plan["arc_dst"].shape[0]
+        up = jnp.take(rows[:, step.c_prev], parent)  # frontier vertex per slot
+        own = (up // n_local) == p
+        u_lo = jnp.where(own, up % n_local, n_local)
+        start = jnp.take(plan["csr_off"], u_lo)
+        idx = jnp.minimum(start + j, A - 1)
+        v = jnp.take(plan["arc_dst"], idx)
+        ok = own & (j < jnp.take(deg, up)) & jnp.take(arc_active, idx)
+        ok &= jnp.take(cand_col, jnp.minimum(v, cand_col.shape[0] - 1))
+        for c in range(step.n_cols):  # injectivity vs every assigned column
+            ok &= v != jnp.take(rows[:, c], parent)
+        for col, op in step.restr:  # symmetry restrictions, in-flight
+            ref = jnp.take(rows[:, col], parent)
+            ok &= (v > ref) if op == "gt" else (v < ref)
+        vi = jnp.where(ok, v, 0).astype(jnp.int32)
+        return prims.psum(vi), prims.psum(ok.astype(jnp.int32))
+
+    return program
+
+
+def _revisit_program(axis_name: Optional[str], step: JoinStep, n_local: int,
+                     iters: int):
+    """One revisit step: the frontier vertex's owner shard binary-searches its
+    local (src, dst-global)-sorted arcs for the revisit edge; per-row keep
+    bits are psum-combined (non-owners contribute zero)."""
+
+    def program(plan, arc_active, deg, rows):
+        prims = _prims(axis_name)
+        p = prims.axis_index()
+        A = plan["arc_dst"].shape[0]
+        u = rows[:, step.c_prev]
+        v = rows[:, step.c_tgt]
+        own = (u // n_local) == p
+        u_lo = jnp.where(own, u % n_local, n_local)
+        lo0 = jnp.take(plan["csr_off"], u_lo)
+        dv = jnp.where(own, jnp.take(deg, u), 0)
+        lo, hi = lo0, lo0 + dv
+        for _ in range(iters):  # vectorized lower_bound over the CSR segment
+            cont = lo < hi
+            mid = (lo + hi) // 2
+            less = jnp.take(plan["arc_dst"], jnp.minimum(mid, A - 1)) < v
+            lo = jnp.where(cont & less, mid + 1, lo)
+            hi = jnp.where(cont & ~less, mid, hi)
+        li = jnp.minimum(lo, A - 1)
+        found = own & (lo < lo0 + dv) & (jnp.take(plan["arc_dst"], li) == v)
+        keep = found & jnp.take(arc_active, li)
+        return prims.psum(keep.astype(jnp.int32))
+
+    return program
+
+
+def _cols_program(axis_name: Optional[str], qs: Tuple[int, ...], n_local: int,
+                  n_pad: int):
+    """Frontier-column exchange: each shard scatters its slice of the
+    requested omega candidacy columns into the global id space; the psum
+    replicates the full columns on every shard (one collective per join)."""
+
+    def program(omega_shard):
+        prims = _prims(axis_name)
+        p = prims.axis_index()
+        cols = []
+        for q in qs:
+            w, b = q // 32, q % 32
+            col = ((omega_shard[:n_local, w] >> jnp.uint32(b)) & 1).astype(
+                jnp.int32)
+            full = jnp.zeros((n_pad + 1,), jnp.int32)
+            full = jax.lax.dynamic_update_slice(full, col, (p * n_local,))
+            cols.append(full)
+        return prims.psum(jnp.stack(cols)) > 0
+
+    return program
+
+
+# ------------------------------------------------------------ join contexts
+# Compiled local join programs, shared across LocalJoinContext instances
+# (one context is built per enumerate_matches call — without this cache every
+# call would re-jit and recompile every step program from scratch). Keys are
+# (program key, n_local, n_pad, A): everything a program factory closes over
+# beyond its arguments. Bounded: cleared wholesale when it outgrows the cap.
+_LOCAL_FN_CACHE: Dict = {}
+_LOCAL_FN_CACHE_CAP = 512
+
+
+class LocalJoinContext:
+    """Single-device context for the device join: the identity-exchange
+    degenerate case (P=1). Built from static topology (one (src, dst) arc
+    sort) plus device gathers of the pruned state — the reduced subgraph is
+    never materialized on the host."""
+
+    axis_name: Optional[str] = None
+
+    def __init__(self, dg: DeviceGraph, state: PruneState):
+        src = np.asarray(dg.src)
+        dst = np.asarray(dg.dst)
+        n = dg.n
+        self.n_local = n
+        self.n_pad = n
+        order = np.lexsort((dst, src))  # by (src, dst): the canonical layout
+        counts = np.bincount(src, minlength=n) if src.size else np.zeros(n, np.int64)
+        off = np.zeros(n + 1, np.int64)
+        off[1:] = np.cumsum(counts)
+        deg = np.zeros(n + 1, np.int64)
+        deg[:n] = counts
+        if src.size:
+            arc_dst = dst[order].astype(np.int32)
+            arc_active = jnp.take(jnp.asarray(state.edge_active),
+                                  jnp.asarray(order.astype(np.int32)))
+        else:  # degenerate edgeless graph: one inactive sink arc
+            arc_dst = np.asarray([n], np.int32)
+            arc_active = jnp.zeros((1,), bool)
+        self.A = int(arc_dst.shape[0])
+        self.plan = {
+            "csr_off": jnp.asarray(off.astype(np.int32)),
+            "arc_dst": jnp.asarray(arc_dst),
+        }
+        self.deg = jnp.asarray(deg.astype(np.int32))
+        self.arc_active = arc_active
+        self._omega = state.omega
+
+    def cols(self, qs: Tuple[int, ...]) -> jnp.ndarray:
+        cols = jnp.stack([self._omega[:, q] for q in qs], axis=0)
+        return jnp.concatenate(
+            [cols, jnp.zeros((len(qs), 1), bool)], axis=1)
+
+    def wrap(self, key, factory: Callable, n_sharded: int) -> Callable:
+        cache_key = (key, self.n_local, self.n_pad, self.A)
+        if cache_key not in _LOCAL_FN_CACHE:
+            if len(_LOCAL_FN_CACHE) >= _LOCAL_FN_CACHE_CAP:
+                _LOCAL_FN_CACHE.clear()
+            _LOCAL_FN_CACHE[cache_key] = jax.jit(factory(self.axis_name))
+        return _LOCAL_FN_CACHE[cache_key]
+
+
+class ShardedJoinContext:
+    """Context over a sharded execution backend (core/engine.py sim/spmd):
+    the join programs run through the backend's program wrapper (vmap or
+    shard_map) against the partition's join plan, reading the DEVICE-RESIDENT
+    pruned state (omega_all / ea_all) directly — no gather of the reduced
+    subgraph, no host-side compaction."""
+
+    def __init__(self, backend):
+        from repro.core import engine as engine_mod
+
+        self.axis_name = engine_mod.SHARD_AXIS
+        self._backend = backend
+        part = backend.part
+        plan = part.join_plan()
+        self.n_local = part.n_local
+        self.n_pad = plan.n_pad
+        self.A = plan.A
+        self.plan = {
+            "csr_off": jnp.asarray(plan.csr_off),
+            "arc_dst": jnp.asarray(plan.arc_dst),
+        }
+        self.deg = jnp.asarray(plan.deg)
+        ea_flat = backend.ea_all.reshape(part.P, plan.A)
+        self.arc_active = jnp.take_along_axis(
+            ea_flat, jnp.asarray(plan.perm), axis=1)
+        self._fns: Dict = {}
+
+    def cols(self, qs: Tuple[int, ...]) -> jnp.ndarray:
+        fn = self.wrap(
+            ("join_cols", tuple(qs)),
+            lambda axis: _cols_program(axis, tuple(qs), self.n_local,
+                                       self.n_pad),
+            n_sharded=1,
+        )
+        return fn(self._backend.omega_all)
+
+    def wrap(self, key, factory: Callable, n_sharded: int) -> Callable:
+        if key not in self._fns:
+            inner = self._backend._fn(key, factory(self.axis_name), n_sharded)
+            # replicated outputs: every shard holds the same psum result
+            self._fns[key] = lambda *a: jax.tree_util.tree_map(
+                lambda x: x[0], inner(*a))
+        return self._fns[key]
+
+
+# ------------------------------------------------------------- join engines
+class RowBlock:
+    """A device row table padded to a power-of-two height: `data[k:]` are
+    inert sink rows (every column = the padding-sink vertex, degree 0, no
+    owner shard), so each join program compiles once per pow2 bucket instead
+    of once per exact row count."""
+
+    __slots__ = ("data", "k")
+
+    def __init__(self, data, k: int):
+        self.data = data
+        self.k = int(k)
+
+
+class DeviceJoin:
+    """The device-resident join over a LocalJoinContext / ShardedJoinContext.
+
+    Rows live on device; the host sees only scalar sizes (capacity / kept-row
+    counts — the static-shape handshake XLA requires) and, in count mode,
+    nothing else: completion counts accumulate from the psum-combined keep
+    bits without ever materializing rows."""
+
+    route = "device"
+
+    def __init__(self, ctx, template: Template, walk: Sequence[int],
+                 max_rows: int, symmetry_break: bool = False,
+                 stats: Optional[Dict] = None):
+        restr = template.symmetry_restrictions() if symmetry_break else ()
+        self.steps, self.seen_q = walk_steps(walk, restr)
+        self.ctx = ctx
+        self.template = template
+        self.max_rows = max_rows
+        self.stats = stats
+        self.walk0 = walk[0]
+        self.cand = ctx.cols(tuple(self.seen_q))  # bool[n_seen, n_pad+1]
+        self._rv_iters = max(int(np.ceil(np.log2(max(ctx.A, 2)))) + 1, 1)
+
+    def _pad(self, data, k: int) -> RowBlock:
+        kp = _pow2(max(k, 1))
+        if kp > data.shape[0]:
+            sink = jnp.full((kp - data.shape[0], data.shape[1]),
+                            self.ctx.n_pad, jnp.int32)
+            data = jnp.concatenate([data, sink], axis=0)
+        return RowBlock(data, k)
+
+    # -- engine API
+    def sources(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.cand[0][:-1]))
+
+    def seed(self, ids: np.ndarray) -> RowBlock:
+        ids = np.asarray(ids).astype(np.int32)
+        return self._pad(jnp.asarray(ids).reshape(-1, 1), ids.size)
+
+    def nrows(self, rows: RowBlock) -> int:
+        return rows.k
+
+    def step(self, rows: RowBlock, r: int, enforce: bool = True) -> RowBlock:
+        s = self.steps[r - 1]
+        if s.kind == "revisit":
+            fn = self.ctx.wrap(
+                ("join_rv",) + s.key(),
+                lambda axis: _revisit_program(axis, s, self.ctx.n_local,
+                                              self._rv_iters),
+                n_sharded=2,
+            )
+            keep = fn(self.ctx.plan, self.ctx.arc_active, self.ctx.deg,
+                      rows.data)
+            return self._compact(rows, keep, None, None, s, enforce=enforce)
+
+        # expansion: slot layout from STATIC degrees (identical on any shard
+        # count); the exact capacity is read back as one scalar per step.
+        # Sink pad rows have degree 0 — they occupy no slots.
+        deg_h = np.asarray(jnp.take(self.ctx.deg, rows.data[:, s.c_prev]))
+        cum_h = np.cumsum(deg_h, dtype=np.int64)
+        T = int(cum_h[-1]) if cum_h.size else 0
+        if enforce and T > self.max_rows:
+            raise TdsOverflow(
+                f"join capacity {T} > max_rows={self.max_rows} at step {r}")
+        if T == 0:
+            return RowBlock(jnp.zeros((0, s.n_cols + 1), jnp.int32), 0)
+        cum = jnp.asarray(cum_h.astype(np.int32))
+        t = jnp.arange(_pow2(T), dtype=jnp.int32)
+        parent = jnp.clip(jnp.searchsorted(cum, t, side="right"),
+                          0, rows.data.shape[0] - 1).astype(jnp.int32)
+        j = t - jnp.take(cum - jnp.asarray(deg_h.astype(np.int32)), parent)
+        fn = self.ctx.wrap(
+            ("join_ex",) + s.key(),
+            lambda axis: _expand_program(axis, s, self.ctx.n_local),
+            n_sharded=2,
+        )
+        newv, keep = fn(self.ctx.plan, self.ctx.arc_active,
+                        self.cand[s.c_tgt], self.ctx.deg, rows.data, parent, j)
+        if self.stats is not None:
+            self.stats["join_expansions"] = (
+                self.stats.get("join_expansions", 0) + T)
+        return self._compact(rows, keep, newv, parent, s, enforce=enforce)
+
+    def _compact(self, rows: RowBlock, keep, newv, parent, s: JoinStep,
+                 enforce: bool = True) -> RowBlock:
+        k_new = int(jnp.sum(keep))  # sink/pad slots contribute 0
+        if enforce and k_new > self.max_rows:
+            raise TdsOverflow(
+                f"join rows {k_new} > max_rows={self.max_rows}")
+        width = s.n_cols + (1 if s.kind == "expand" else 0)
+        if k_new == 0:
+            return RowBlock(jnp.zeros((0, width), jnp.int32), 0)
+        sel = jnp.nonzero(keep, size=_pow2(k_new), fill_value=keep.shape[0])[0]
+        if s.kind == "revisit":
+            sink = jnp.full((1, width), self.ctx.n_pad, jnp.int32)
+            out = jnp.take(jnp.concatenate([rows.data, sink]), sel, axis=0)
+        else:
+            sinkv = jnp.concatenate([newv, jnp.asarray([self.ctx.n_pad],
+                                                       jnp.int32)])
+            parent_sink = jnp.concatenate(
+                [parent, jnp.asarray([0], jnp.int32)])
+            prow = jnp.take(rows.data, jnp.take(parent_sink, sel), axis=0)
+            col = jnp.take(sinkv, sel)[:, None]
+            pad_row = sel >= keep.shape[0]
+            prow = jnp.where(pad_row[:, None], jnp.int32(self.ctx.n_pad), prow)
+            out = jnp.concatenate([prow, col], axis=1)
+        if self.stats is not None:
+            self.stats["join_rows_max"] = max(
+                self.stats.get("join_rows_max", 0), k_new)
+        return RowBlock(out, k_new)
+
+    def split(self, rows: RowBlock, r: int, budget: int) -> List[RowBlock]:
+        s = self.steps[r - 1]
+        if s.kind == "revisit" or rows.k <= 1:
+            return [rows]
+        deg_h = np.asarray(
+            jnp.take(self.ctx.deg, rows.data[:rows.k, s.c_prev])
+        ).astype(np.int64)
+        return [self._pad(piece, piece.shape[0]) for piece in
+                _split_by_capacity(rows.data[:rows.k], deg_h, budget)]
+
+    def emit(self, rows: RowBlock) -> np.ndarray:
+        perm = [self.seen_q.index(q) for q in range(self.template.n0)]
+        return np.asarray(rows.data[:rows.k])[:, perm].astype(np.int32)
+
+    def count(self, rows: RowBlock) -> int:
+        return rows.k
+
+
+class HostJoin:
+    """The numpy row-table join over the compacted active subgraph, exposed
+    through the same engine API (the tds.py step primitives underneath)."""
+
+    route = "host"
+
+    def __init__(self, sub: ActiveSubgraph, template: Template,
+                 walk: Sequence[int], max_rows: int,
+                 symmetry_break: bool = False,
+                 stats: Optional[Dict] = None):
+        restr = template.symmetry_restrictions() if symmetry_break else ()
+        self.steps, self.seen_q = walk_steps(walk, restr)
+        self.sub = sub
+        self.template = template
+        self.max_rows = max_rows
+        self.stats = stats
+        self.walk0 = walk[0]
+
+    # -- engine API
+    def sources(self) -> np.ndarray:
+        return np.flatnonzero(self.sub.omega[:, self.walk0])
+
+    def seed(self, ids: np.ndarray) -> np.ndarray:
+        return np.asarray(ids).astype(np.int32).reshape(-1, 1)
+
+    def nrows(self, rows) -> int:
+        return int(rows.shape[0])
+
+    def step(self, rows, r: int, enforce: bool = True):
+        s = self.steps[r - 1]
+        if s.kind == "revisit":
+            return tds_mod.revisit_rows(self.sub, rows, s.c_prev, s.c_tgt)
+        rows = tds_mod.expand_rows(self.sub, rows, s.c_prev, s.q_next,
+                                   s.n_cols, s.restr)
+        if enforce and rows.shape[0] > self.max_rows:
+            raise TdsOverflow(
+                f"join rows {rows.shape[0]} > max_rows={self.max_rows} "
+                f"at step {r}")
+        if self.stats is not None:
+            self.stats["join_rows_max"] = max(
+                self.stats.get("join_rows_max", 0), int(rows.shape[0]))
+        return rows
+
+    def split(self, rows, r: int, budget: int) -> List:
+        s = self.steps[r - 1]
+        if s.kind == "revisit" or rows.shape[0] <= 1:
+            return [rows]
+        cap = tds_mod.expand_capacity(self.sub, rows, s.c_prev)
+        return _split_by_capacity(rows, cap, budget)
+
+    def emit(self, rows) -> np.ndarray:
+        perm = [self.seen_q.index(q) for q in range(self.template.n0)]
+        return np.asarray(rows)[:, perm].astype(np.int32)
+
+    def count(self, rows) -> int:
+        return int(rows.shape[0])
+
+
+def _split_by_capacity(rows, cap: np.ndarray, budget: int) -> List:
+    """Partition a row block so each piece's expansion capacity stays within
+    `budget` (single rows are never split: a lone row whose fan-out exceeds
+    the budget expands in one piece)."""
+    cum = np.cumsum(cap, dtype=np.int64)
+    if cum.size == 0 or cum[-1] <= budget:
+        return [rows]
+    pieces = []
+    start, base = 0, 0
+    n = int(cum.shape[0])
+    while start < n:
+        end = int(np.searchsorted(cum, base + budget, side="right"))
+        end = min(max(end, start + 1), n)
+        pieces.append(rows[start:end])
+        base = int(cum[end - 1])
+        start = end
+    return pieces
+
+
+# -------------------------------------------------------- streaming emitter
+def stream_join(engine, sources: np.ndarray, chunk: int,
+                budget: int) -> Iterator[np.ndarray]:
+    """Bounded-memory streaming enumeration: source chunks are walked
+    depth-first, splitting row blocks before each expansion so no step's
+    output exceeds `budget` rows; completed blocks (template-vertex column
+    order) are yielded as they finish. Peak live rows ~ walk_length * budget
+    (one in-flight block per depth level)."""
+
+    def dfs(rows, r: int) -> Iterator[np.ndarray]:
+        if engine.nrows(rows) == 0:
+            return
+        if r > len(engine.steps):
+            yield engine.emit(rows)
+            return
+        for piece in engine.split(rows, r, budget):
+            yield from dfs(engine.step(piece, r, enforce=False), r + 1)
+
+    sources = np.asarray(sources)
+    for off in range(0, sources.size, chunk):
+        yield from dfs(engine.seed(sources[off: off + chunk]), 1)

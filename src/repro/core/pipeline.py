@@ -54,6 +54,10 @@ class PruneResult:
     dg: DeviceGraph
     phases: List[PhaseStat]
     stats: Dict
+    # the execution backend that ran the prune — a sharded result hands its
+    # device-resident shard arrays straight to the enumeration join, so
+    # `enumerate_matches(result)` never gathers the reduced subgraph
+    backend: Optional[object] = None
 
     # The masks are device->host materializations hit repeatedly by benchmarks
     # and enumeration — computed once, cached on the instance.
@@ -142,7 +146,8 @@ def prune(
 
     backend.init(initial_state)
     if template.n0 == 1:
-        return PruneResult(backend.final_state(), template, dg, [], stats)
+        return PruneResult(backend.final_state(), template, dg, [], stats,
+                           backend=backend)
 
     backend.record_routes(stats)  # each backend decides what (if anything) to record
 
@@ -197,7 +202,8 @@ def prune(
 
     backend.finalize_stats(stats)
     return PruneResult(
-        backend.final_state(), template, dg, _materialize(raw_phases), stats)
+        backend.final_state(), template, dg, _materialize(raw_phases), stats,
+        backend=backend)
 
 
 def _materialize(raw_phases: List[tuple]) -> List[PhaseStat]:

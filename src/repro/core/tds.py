@@ -85,6 +85,58 @@ def _has_edge(sub: ActiveSubgraph, u: np.ndarray, v: np.ndarray) -> np.ndarray:
     return (sub.edge_keys.shape[0] > 0) & (sub.edge_keys[pos] == keys)
 
 
+# ------------------------------------------------------- join step primitives
+# One constrained-walk step over a row table (partial assignments). These are
+# the single source of truth for the join semantics: `tds_walk` (the pruning
+# path) and the enumeration engines in core/join.py both run them. `restr` is
+# a tuple of GraphPi-style partial-order checks ((col, op) with op "gt"/"lt"):
+# the newly assigned vertex must compare that way against the named column —
+# symmetry breaking enforced IN-FLIGHT, so counting needs no post-hoc dedup.
+def expand_rows(
+    sub: ActiveSubgraph,
+    rows: np.ndarray,
+    c_prev: int,
+    q_next: int,
+    n_cols: int,
+    restr: Tuple[Tuple[int, str], ...] = (),
+) -> np.ndarray:
+    """Expand the frontier column along active CSR arcs, filter by
+    omega-candidacy + injectivity (+ optional symmetry restrictions), and
+    append the new assignment column."""
+    cur = rows[:, c_prev]
+    starts = sub.offsets[cur]
+    counts = (sub.offsets[cur + 1] - starts).astype(np.int64)
+    flat = _ragged_ranges(starts, counts)
+    rep = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
+    nbr = sub.neighbors[flat]
+    keep = sub.omega[nbr, q_next]
+    # injectivity: new vertex differs from every assigned one
+    for c in range(n_cols):
+        keep &= nbr != rows[rep, c]
+    for col, op in restr:
+        ref = rows[rep, col]
+        keep &= (nbr > ref) if op == "gt" else (nbr < ref)
+    return np.concatenate(
+        [rows[rep[keep]], nbr[keep, None].astype(np.int32)], axis=1
+    )
+
+
+def revisit_rows(sub: ActiveSubgraph, rows: np.ndarray, c_prev: int,
+                 c_tgt: int) -> np.ndarray:
+    """Keep rows whose revisit edge (frontier -> already-assigned target)
+    exists in the active subgraph."""
+    keep = _has_edge(sub, rows[:, c_prev], rows[:, c_tgt])
+    return rows[keep]
+
+
+def expand_capacity(sub: ActiveSubgraph, rows: np.ndarray,
+                    c_prev: int) -> np.ndarray:
+    """Per-row expansion fan-out (active CSR degree of the frontier vertex) —
+    what the streaming emitter splits row blocks by."""
+    cur = rows[:, c_prev]
+    return (sub.offsets[cur + 1] - sub.offsets[cur]).astype(np.int64)
+
+
 def tds_walk(
     sub: ActiveSubgraph,
     walk: Sequence[int],
@@ -109,24 +161,11 @@ def tds_walk(
         if rows.shape[0] == 0:
             break
         q_prev, q_next = walk[r - 1], walk[r]
-        cur = rows[:, seen_q.index(q_prev)]
+        c_prev = seen_q.index(q_prev)
         if q_next in seen_q:
-            tgt = rows[:, seen_q.index(q_next)]
-            keep = _has_edge(sub, cur, tgt)
-            rows = rows[keep]
+            rows = revisit_rows(sub, rows, c_prev, seen_q.index(q_next))
         else:
-            starts = sub.offsets[cur]
-            counts = (sub.offsets[cur + 1] - starts).astype(np.int64)
-            flat = _ragged_ranges(starts, counts)
-            rep = np.repeat(np.arange(rows.shape[0], dtype=np.int64), counts)
-            nbr = sub.neighbors[flat]
-            keep = sub.omega[nbr, q_next]
-            # injectivity: new vertex differs from every assigned one
-            for c in range(len(seen_q)):
-                keep &= nbr != rows[rep, c]
-            rows = np.concatenate(
-                [rows[rep[keep]], nbr[keep, None].astype(np.int32)], axis=1
-            )
+            rows = expand_rows(sub, rows, c_prev, q_next, len(seen_q))
             seen_q.append(q_next)
             if rows.shape[0] > max_rows:
                 raise TdsOverflow(

@@ -84,6 +84,10 @@ class Template:
         self._nx.add_edges_from(es)
         if self.n0 > 1 and not nx.is_connected(self._nx):
             raise ValueError("template must be connected (paper §2)")
+        # lazily computed + cached symmetry data (automorphism group, GraphPi
+        # restrictions) — enumeration/counting hit these on every call
+        self._automorphisms: Optional[Tuple[Tuple[int, ...], ...]] = None
+        self._restrictions: Optional[Tuple[Tuple[int, int], ...]] = None
 
     # ---------------------------------------------------------------- basics
     @property
@@ -136,6 +140,41 @@ class Template:
             out[q] = counts
         return out
 
+    # ------------------------------------------------------------- symmetry
+    def automorphisms(self) -> Tuple[Tuple[int, ...], ...]:
+        """All label-preserving graph automorphisms of the template, as
+        permutation tuples (g[q] = image of q). Computed once by a
+        backtracking search over invariant-refined candidate sets (label,
+        degree, sorted neighbor-label multiset) and cached on the instance —
+        the template has <= 64 vertices, so this is tiny. Replaces the old
+        brute-force self-enumeration through the matching oracle."""
+        if self._automorphisms is None:
+            self._automorphisms = tuple(_automorphism_search(self))
+        return self._automorphisms
+
+    def automorphism_count(self) -> int:
+        return len(self.automorphisms())
+
+    def symmetry_restrictions(self) -> Tuple[Tuple[int, int], ...]:
+        """GraphPi/GraphZero-style partial-order restrictions derived from the
+        automorphism group by an orbit/stabilizer chain: a pair (a, b) means
+        phi(a) < phi(b). An embedding class under Aut(T) has EXACTLY one
+        member satisfying every restriction (the minimal-image representative
+        at each level of the chain), so a join that enforces them in-flight
+        counts matches-up-to-automorphism directly: restricted_count * |Aut|
+        equals the unrestricted embedding count, with no post-hoc dedup."""
+        if self._restrictions is None:
+            group = list(self.automorphisms())
+            restr = []
+            for q in range(self.n0):
+                if len(group) == 1:
+                    break
+                orbit = sorted({g[q] for g in group})
+                restr.extend((q, q2) for q2 in orbit if q2 != q)
+                group = [g for g in group if g[q] == q]  # stabilizer of q
+            self._restrictions = tuple(restr)
+        return self._restrictions
+
     def remove_edge(self, a: int, b: int) -> "Template":
         es = [e for e in self.edge_set if e != (min(a, b), max(a, b))]
         return Template(self.labels, es)
@@ -165,6 +204,50 @@ class Template:
 
     def __repr__(self):
         return f"Template(n0={self.n0}, m0={self.m0}, labels={self.labels.tolist()})"
+
+
+def _automorphism_search(t: "Template") -> List[Tuple[int, ...]]:
+    """Backtracking search for all label-preserving automorphisms.
+
+    Candidate images are pre-refined by the (label, degree, sorted
+    neighbor-label multiset) invariant; the search then assigns images in
+    vertex order, checking adjacency AND non-adjacency against every
+    already-assigned vertex (a bijection preserving all edges of a finite
+    graph with the same edge count preserves non-edges too, but checking both
+    prunes the tree earlier)."""
+    n0 = t.n0
+    inv = []
+    for q in range(n0):
+        nb_labels = tuple(sorted(int(t.labels[p]) for p in t.adj[q]))
+        inv.append((int(t.labels[q]), len(t.adj[q]), nb_labels))
+    cand = [[p for p in range(n0) if inv[p] == inv[q]] for q in range(n0)]
+    adj = t.adjacency_matrix()
+
+    out: List[Tuple[int, ...]] = []
+    img = [-1] * n0
+    used = [False] * n0
+
+    def bt(q: int):
+        if q == n0:
+            out.append(tuple(img))
+            return
+        for p in cand[q]:
+            if used[p]:
+                continue
+            ok = True
+            for q2 in range(q):
+                if adj[q, q2] != adj[p, img[q2]]:
+                    ok = False
+                    break
+            if ok:
+                img[q] = p
+                used[p] = True
+                bt(q + 1)
+                used[p] = False
+                img[q] = -1
+
+    bt(0)
+    return out
 
 
 # ------------------------------------------------------------- walk building

@@ -65,9 +65,24 @@ class EdgePartition:
     # map (None only on partitions built by pre-engine code)
     arc_flat_slot: Optional[np.ndarray] = None  # int64[m]
 
+    # destination local index per send bucket slot (n_local for pads) — the
+    # device-resident enumeration join reads arc destinations from it
+    # (None only on partitions built by pre-join code)
+    send_dst_local: Optional[np.ndarray] = None  # int32[P, P, B]
+
+    def __post_init__(self):
+        self._join_plan: Optional["JoinPlan"] = None
+
     @property
     def total_slots(self) -> int:
         return self.P * self.B
+
+    def join_plan(self) -> "JoinPlan":
+        """The (cached) shard-local arc plan the device-resident enumeration
+        join expands over — see `build_join_plan`."""
+        if self._join_plan is None:
+            self._join_plan = build_join_plan(self)
+        return self._join_plan
 
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         return {
@@ -153,7 +168,62 @@ def partition_graph(g: Graph, P: int, pad_multiple: int = 8) -> EdgePartition:
         labels_local=labels_local, vertex_valid=vertex_valid,
         global_of_local=global_of_local,
         arc_flat_slot=arc_flat_slot,
+        send_dst_local=send_dst_local,
     )
+
+
+@dataclasses.dataclass
+class JoinPlan:
+    """Static per-shard arc plan for the device-resident enumeration join
+    (core/join.py): every shard's arcs re-sorted by (src_local, dst_global)
+    so row expansion is a shard-local CSR walk, in an order that is IDENTICAL
+    to the single-device plan's (src, dst) sort — the join's slot layout (and
+    therefore its row tables) is bit-identical across shard counts because
+    all arcs of a vertex live on exactly its owner shard.
+
+    `deg` is the STATIC per-vertex out-degree in the padded global id space
+    (sink row n_pad has degree 0): the join sizes its expansion buffers from
+    it, so capacity math never depends on the pruned state and matches the
+    local plan exactly.
+    """
+
+    A: int  # arcs per shard (P*B, padded)
+    n_pad: int  # padded global vertex space (P * n_local)
+    perm: np.ndarray  # int32[P, A]: sorted order -> flat bucket slot (gather map)
+    csr_off: np.ndarray  # int32[P, n_local + 1] CSR over sorted non-pad arcs
+    arc_dst: np.ndarray  # int32[P, A] dst global id in sorted order (n_pad for pads)
+    deg: np.ndarray  # int32[n_pad + 1]
+
+
+def build_join_plan(part: EdgePartition) -> JoinPlan:
+    if part.send_dst_local is None:
+        raise ValueError(
+            "EdgePartition lacks send_dst_local (built by a pre-join "
+            "partition_graph?); rebuild the partition")
+    P, B, n_local = part.P, part.B, part.n_local
+    A = P * B
+    n_pad = P * n_local
+    src_lo = part.send_src_local.reshape(P, A)  # [P, (q, b)] flat
+    dst_sh = np.broadcast_to(
+        np.repeat(np.arange(P, dtype=np.int64), B)[None, :], (P, A))
+    dst_glob = dst_sh * n_local + part.send_dst_local.reshape(P, A)
+    pad = part.send_pad.reshape(P, A)
+    dst_glob = np.where(pad, n_pad, dst_glob)
+    perm = np.empty((P, A), dtype=np.int32)
+    csr_off = np.zeros((P, n_local + 1), dtype=np.int64)
+    arc_dst = np.empty((P, A), dtype=np.int32)
+    deg = np.zeros(n_pad + 1, dtype=np.int64)
+    for p in range(P):
+        # pads carry src_local == n_local, so they sort after every real arc
+        order = np.lexsort((dst_glob[p], src_lo[p]))
+        perm[p] = order.astype(np.int32)
+        arc_dst[p] = dst_glob[p][order].astype(np.int32)
+        counts = np.bincount(src_lo[p][~pad[p]], minlength=n_local + 1)[:n_local]
+        csr_off[p, 1:] = np.cumsum(counts)
+        deg[p * n_local : p * n_local + n_local] = counts
+    return JoinPlan(A=A, n_pad=n_pad, perm=perm,
+                    csr_off=csr_off.astype(np.int32), arc_dst=arc_dst,
+                    deg=deg.astype(np.int32))
 
 
 def _twin_index(g: Graph) -> np.ndarray:

@@ -68,6 +68,11 @@ ROUTE_UNPACKED = "unpacked"
 # the fused multi-hop NLCC wave (kernels/bitset_wave.py): one kernel call per
 # wave instead of one bitset_spmm launch per hop
 ROUTE_FUSED = "fused"
+# the enumeration join (route name ``enumerate.join``, core/enumerate.py):
+# host = the numpy row-table join over the compacted subgraph; device = the
+# device-resident join over the execution-backend prims (core/join.py)
+ROUTE_HOST = "host"
+ROUTE_DEVICE = "device"
 
 # wildcard bucket: one decision for every shape of a (kernel, backend) pair
 BUCKET_ANY = "*"

@@ -1,0 +1,207 @@
+"""Match-enumeration engine correctness (core/join.py + core/enumerate.py).
+
+Covers: host-vs-device join route parity on the local backend, the counting
+fast path (symmetry-broken in-flight: canonical count x |Aut| equals the
+brute-force embedding count), the streaming emitter, the chunk-1 streaming
+fallback on overflow, automorphism-group caching, and dispatch-policy
+routing of ``enumerate.join``.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import generators as gen
+from repro.core import Template, prune, enumerate_matches, count_matches, stream_matches
+from repro.core.oracle import enumerate_matches_bruteforce
+from repro.core import template as template_mod
+from repro.kernels import registry
+
+
+def _er(seed=1, n=150, deg=6.0, n_labels=3):
+    return gen.erdos_renyi_graph(n, deg, seed=seed, n_labels=n_labels)
+
+
+TEMPLATES = [
+    # acyclic, repeated labels (PC + TDS walk, no revisits)
+    ("path-repeat", Template([0, 1, 2, 1], [(0, 1), (1, 2), (2, 3)])),
+    # cyclic walk with a revisit step closing the cycle
+    ("triangle", Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])),
+    # same-label triangle: |Aut| = 6, all three symmetry restrictions fire
+    ("triangle-sym", Template([1, 1, 1], [(0, 1), (1, 2), (2, 0)])),
+    # two triangles sharing a vertex: revisit-heavy edge-cover walk
+    ("bowtie", Template([0, 1, 1, 2, 2],
+                        [(0, 1), (1, 2), (2, 0), (0, 3), (3, 4), (4, 0)])),
+]
+
+
+@pytest.mark.parametrize("case", TEMPLATES, ids=lambda c: c[0])
+def test_host_device_route_parity(case):
+    """The device-resident join (local context, identity exchange) is
+    bit-identical to the host numpy join: embeddings, counts, vertex sets."""
+    _, tmpl = case
+    g = _er()
+    res = prune(g, tmpl)
+    host = enumerate_matches(res.dg, res.state, tmpl, route="host")
+    dev = enumerate_matches(res.dg, res.state, tmpl, route="device")
+    assert dev.route == "device" and host.route == "host"
+    np.testing.assert_array_equal(host.embeddings, dev.embeddings)
+    assert host.n_embeddings == dev.n_embeddings
+    assert host.n_distinct_vertex_sets == dev.n_distinct_vertex_sets
+    oracle = enumerate_matches_bruteforce(g, tmpl)
+    assert host.n_embeddings == len(oracle)
+
+
+@pytest.mark.parametrize("route", ["host", "device"])
+@pytest.mark.parametrize("case", TEMPLATES, ids=lambda c: c[0])
+def test_count_mode_matches_oracle(case, route):
+    """The counting-only fast path: symmetry restrictions enforced in-flight,
+    canonical count x |Aut| == the brute-force embedding count — no post-hoc
+    dedup anywhere."""
+    _, tmpl = case
+    g = _er(seed=2)
+    res = prune(g, tmpl)
+    oracle = enumerate_matches_bruteforce(g, tmpl)
+    c = count_matches(res.dg, res.state, tmpl, route=route)
+    assert c.mode == "count"
+    assert c.embeddings.shape == (0, tmpl.n0)  # rows never materialized
+    assert c.n_distinct_vertex_sets == -1
+    assert c.n_embeddings == len(oracle)
+    assert c.n_canonical * c.automorphisms == len(oracle)
+    assert c.automorphisms == tmpl.automorphism_count()
+
+
+def test_symmetry_broken_counts_randomized():
+    """Oracle cross-check over random graphs and symmetric templates:
+    restricted counts x |Aut| equal brute-force counts on both routes."""
+    tmpls = [
+        Template([1, 1, 1], [(0, 1), (1, 2), (2, 0)]),  # Aut 6
+        Template([0, 1, 0, 1], [(0, 1), (1, 2), (2, 3), (3, 0)]),  # Aut 4
+        Template([0, 0], [(0, 1)]),  # Aut 2
+    ]
+    for seed in range(3):
+        g = _er(seed=seed + 10, n=80, deg=4.0, n_labels=2)
+        for tmpl in tmpls:
+            res = prune(g, tmpl)
+            oracle = len(enumerate_matches_bruteforce(g, tmpl))
+            for route in ("host", "device"):
+                c = count_matches(res.dg, res.state, tmpl, route=route)
+                assert c.n_canonical * c.automorphisms == oracle, (
+                    seed, tmpl.labels.tolist(), route)
+                assert c.n_embeddings == oracle
+
+
+def test_symmetry_broken_materialize_is_canonical():
+    """materialize + symmetry_break yields exactly the canonical
+    representatives: one embedding per automorphism class, each the
+    restriction-minimal member."""
+    g = _er(seed=3, n_labels=2)
+    tmpl = Template([1, 1, 1], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl)
+    full = enumerate_matches(res.dg, res.state, tmpl)
+    canon = enumerate_matches(res.dg, res.state, tmpl, symmetry_break=True)
+    assert canon.n_canonical * canon.automorphisms == full.n_embeddings
+    assert canon.n_embeddings == full.n_embeddings
+    # every canonical row satisfies the restrictions (here: strictly sorted)
+    emb = canon.embeddings
+    assert np.all(emb[:, 0] < emb[:, 1]) and np.all(emb[:, 1] < emb[:, 2])
+    # and each is a member of the full embedding set
+    full_set = {tuple(r) for r in full.embeddings}
+    assert all(tuple(r) in full_set for r in emb)
+
+
+@pytest.mark.parametrize("route", ["host", "device"])
+def test_stream_matches_equals_materialize(route):
+    g = _er(seed=4)
+    tmpl = Template([0, 1, 2, 1], [(0, 1), (1, 2), (2, 3)])
+    res = prune(g, tmpl)
+    full = enumerate_matches(res.dg, res.state, tmpl)
+    blocks = list(stream_matches(res.dg, res.state, tmpl, max_rows=40,
+                                 route=route))
+    assert all(b.shape[1] == tmpl.n0 for b in blocks)
+    cat = (np.unique(np.concatenate(blocks, axis=0), axis=0)
+           if blocks else np.zeros((0, tmpl.n0), np.int32))
+    np.testing.assert_array_equal(cat, full.embeddings)
+    # the budget bounds block sizes (single-row fan-out is the only excess)
+    assert sum(b.shape[0] for b in blocks) == full.n_embeddings
+
+
+@pytest.mark.parametrize("route", ["host", "device"])
+@pytest.mark.parametrize("mode", ["materialize", "count"])
+def test_chunk1_overflow_falls_back_to_streaming(route, mode):
+    """A max_rows so tight that even a single source overflows must no longer
+    raise: the enumeration finishes through the bounded-memory streaming
+    emitter and still matches the oracle."""
+    g = _er(seed=5)
+    tmpl = Template([0, 1, 2, 1], [(0, 1), (1, 2), (2, 3)])
+    res = prune(g, tmpl)
+    oracle = enumerate_matches_bruteforce(g, tmpl)
+    stats = {}
+    enum = enumerate_matches(res.dg, res.state, tmpl, max_rows=3, chunk=8,
+                             route=route, mode=mode, stats=stats)
+    assert stats.get("enum_stream_fallbacks", 0) > 0
+    assert enum.n_embeddings == len(oracle)
+
+
+def test_empty_result_both_modes_and_routes():
+    g = gen.star_graph(10, center_label=0, leaf_label=1)
+    tmpl = Template([0, 1, 1], [(0, 1), (1, 2), (0, 2)])  # triangle, absent
+    res = prune(g, tmpl)
+    for route in ("host", "device"):
+        for mode in ("materialize", "count"):
+            enum = enumerate_matches(res.dg, res.state, tmpl, route=route,
+                                     mode=mode)
+            assert enum.n_embeddings == 0
+
+
+def test_automorphism_group_cached_on_template(monkeypatch):
+    """The group is computed once and cached on the Template — repeated
+    enumeration calls (including the empty-result path) never re-search."""
+    calls = {"n": 0}
+    real = template_mod._automorphism_search
+
+    def counting(t):
+        calls["n"] += 1
+        return real(t)
+
+    monkeypatch.setattr(template_mod, "_automorphism_search", counting)
+    tmpl = Template([1, 1, 1], [(0, 1), (1, 2), (2, 0)])
+    g = gen.star_graph(6, center_label=0, leaf_label=0)  # no triangle: empty
+    res = prune(g, tmpl)
+    for _ in range(3):
+        enum = enumerate_matches(res.dg, res.state, tmpl)
+        assert enum.n_embeddings == 0
+        count_matches(res.dg, res.state, tmpl)
+    assert calls["n"] == 1
+    assert tmpl.automorphisms() is tmpl.automorphisms()
+
+
+def test_enumerate_join_route_honors_policy():
+    """A tuned ``enumerate.join`` decision routes the local join; the route
+    taken is recorded in stats."""
+    g = _er(seed=6)
+    tmpl = Template([0, 1, 2], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl)
+    pol = registry.DispatchPolicy()
+    pol.set_route("enumerate.join", jax.default_backend(),
+                  ("local", "count"), registry.ROUTE_DEVICE)
+    registry.set_policy(pol)
+    try:
+        stats = {}
+        c = count_matches(res.dg, res.state, tmpl, stats=stats)
+    finally:
+        registry.set_policy(None)
+    assert c.route == registry.ROUTE_DEVICE
+    assert stats["enumerate_route"] == registry.ROUTE_DEVICE
+    # untuned default stays on the host join
+    stats = {}
+    c2 = count_matches(res.dg, res.state, tmpl, stats=stats)
+    assert c2.route == registry.ROUTE_HOST
+    assert c2.n_embeddings == c.n_embeddings
+
+
+def test_sharded_route_rejects_host():
+    g = gen.rmat_graph(7, edge_factor=4, seed=1)
+    tmpl = Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)])
+    res = prune(g, tmpl, partition=2, guarantee_precision=False)
+    with pytest.raises(ValueError, match="device-resident"):
+        enumerate_matches(res, route="host")

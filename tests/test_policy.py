@@ -328,6 +328,9 @@ def test_rollup_schema_roundtrip(tmp_path):
         phases=[{"phase": "LCC", "seconds": 0.5}],
         sharded_prune={"P": 4, "backend": "sim", "seconds": 7.4,
                        "matches_local": True},
+        enumeration={"template": "T4-square-rare", "count_seconds": 0.1,
+                     "materialize_seconds": 0.3, "n_embeddings": 12,
+                     "automorphisms": 2, "count_matches_materialize": True},
         path=str(tmp_path / "BENCH_pipeline.json"),
     )
     payload = json.load(open(path))
@@ -337,6 +340,7 @@ def test_rollup_schema_roundtrip(tmp_path):
     assert payload["graph"] == {"n": 2048, "m": 25316}
     assert payload["suites"]["dispatch_policy"]["ok"] is True
     assert payload["sharded_prune"]["matches_local"] is True
+    assert payload["enumeration"]["count_matches_materialize"] is True
     route_key = f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}"
     assert payload["policy"]["routes"][route_key]["choice"] == registry.ROUTE_PACKED
 
@@ -351,6 +355,9 @@ def test_rollup_schema_roundtrip(tmp_path):
     (lambda p: p.update(sharded_prune={"P": 4, "seconds": 1.0}),
      "missing key 'matches_local'"),
     (lambda p: p.update(sharded_prune=[1]), "sharded_prune must be a dict"),
+    (lambda p: p.update(enumeration={"count_seconds": 0.1}),
+     "missing key 'materialize_seconds'"),
+    (lambda p: p.update(enumeration=[1]), "enumeration must be a dict"),
 ])
 def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
     registry.set_policy(None)

@@ -248,6 +248,104 @@ def test_sharded_initial_state_roundtrip():
         np.asarray(base.state.edge_active), np.asarray(resumed.state.edge_active))
 
 
+# ----------------------------------------------------- sharded enumeration
+def _enumerate_no_gather(result, **kw):
+    """enumerate_matches on a sharded result, asserting the join never
+    host-compacts the reduced subgraph (the PR's no-gather contract)."""
+    from repro.core import enumerate as enum_mod
+    from repro.core import tds as tds_mod
+
+    calls = {"n": 0}
+    real = tds_mod.compact_active
+
+    def guard(*a, **k):
+        calls["n"] += 1
+        return real(*a, **k)
+
+    tds_mod.compact_active = guard
+    enum_mod.compact_active = guard
+    try:
+        out = enum_mod.enumerate_matches(result, **kw)
+    finally:
+        tds_mod.compact_active = real
+        enum_mod.compact_active = real
+    assert calls["n"] == 0, "sharded enumeration gathered the reduced subgraph"
+    return out
+
+
+_BASE_ENUM_CACHE = {}
+
+
+def _base_enum(case):
+    """Local-engine baseline (prune + host-route enumeration), computed once
+    per template case — every shard count compares against the same bits."""
+    from repro.core import enumerate_matches
+
+    name, tmpl, kw = case
+    if name not in _BASE_ENUM_CACHE:
+        base = prune(_graph(), tmpl, **kw)
+        _BASE_ENUM_CACHE[name] = enumerate_matches(base)
+    return _BASE_ENUM_CACHE[name]
+
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+@pytest.mark.parametrize("case", _cases(), ids=lambda c: c[0])
+def test_sim_enumeration_parity(P, case):
+    """Sharded enumeration (the device-resident join over the sim backend's
+    shard arrays) is bit-identical to the local host join — embeddings,
+    counts, distinct vertex sets — and never gathers the reduced subgraph."""
+    name, tmpl, kw = case
+    g = _graph()
+    be = _base_enum(case)
+    sharded = prune(g, tmpl, partition=P, **kw)
+    se = _enumerate_no_gather(sharded)
+    assert se.route == "device"
+    np.testing.assert_array_equal(be.embeddings, se.embeddings,
+                                  err_msg=f"{name} P={P}")
+    assert be.n_embeddings == se.n_embeddings
+    assert be.n_distinct_vertex_sets == se.n_distinct_vertex_sets
+    if name == "cyclic":
+        assert se.n_embeddings > 0  # nontrivial parity
+
+    # counting fast path: same totals, symmetry-broken in-flight
+    sc = _enumerate_no_gather(sharded, mode="count")
+    assert sc.n_embeddings == be.n_embeddings
+    assert sc.n_canonical * sc.automorphisms == be.n_embeddings
+
+
+def test_sim_enumeration_symmetry_counts_vs_oracle():
+    """Symmetry-broken sharded counts x |Aut| equal the brute-force embedding
+    count (|Aut| = 6 here: same-label triangle)."""
+    from repro.core import enumerate_matches
+    from repro.core.oracle import enumerate_matches_bruteforce
+
+    g = _graph()
+    tmpl = Template([5, 5, 5], [(0, 1), (1, 2), (2, 0)])
+    oracle = len(enumerate_matches_bruteforce(g, tmpl))
+    assert oracle > 0
+    sharded = prune(g, tmpl, partition=4)
+    sc = _enumerate_no_gather(sharded, mode="count")
+    assert sc.automorphisms == 6
+    assert sc.n_canonical * 6 == oracle
+    assert sc.n_embeddings == oracle
+
+
+def test_sim_enumeration_streaming_parity():
+    """stream_matches over a sharded result: device-resident blocks under a
+    row budget concatenate to the local materialized embeddings."""
+    from repro.core import enumerate_matches, stream_matches
+
+    g = _graph()
+    tmpl = Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    be = enumerate_matches(base)
+    sharded = prune(g, tmpl, partition=2, guarantee_precision=False)
+    blocks = list(stream_matches(sharded, max_rows=64))
+    cat = (np.unique(np.concatenate(blocks, axis=0), axis=0)
+           if blocks else np.zeros((0, tmpl.n0), np.int32))
+    np.testing.assert_array_equal(be.embeddings, cat)
+
+
 # ---------------------------------------------------------- spmd backend
 _needs_devices = pytest.mark.skipif(
     len(jax.devices()) < 8,
@@ -270,6 +368,26 @@ def test_spmd_prune_parity_8_devices(case):
 
 
 @_needs_devices
+def test_spmd_enumeration_parity_8_devices():
+    """The device-resident enumeration join on a real shard_map mesh: no
+    gather, bit-identical embeddings and symmetry-broken counts."""
+    from repro.core import enumerate_matches
+    from repro.launch.mesh import make_shard_mesh
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    be = enumerate_matches(base)
+    sharded = prune(g, tmpl, mesh=make_shard_mesh(8),
+                    guarantee_precision=False)
+    assert sharded.stats["backend"] == "spmd"
+    se = _enumerate_no_gather(sharded)
+    np.testing.assert_array_equal(be.embeddings, se.embeddings)
+    sc = _enumerate_no_gather(sharded, mode="count")
+    assert sc.n_embeddings == be.n_embeddings
+
+
+@_needs_devices
 def test_spmd_partition_coarser_than_mesh_rejected():
     from repro.launch.mesh import make_shard_mesh
 
@@ -285,7 +403,7 @@ SPMD_SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import numpy as np
     from repro.graph import rmat_graph
-    from repro.core import Template, prune
+    from repro.core import Template, prune, enumerate_matches
     from repro.launch.mesh import make_shard_mesh
 
     g = rmat_graph(9, edge_factor=6, seed=5)
@@ -301,6 +419,12 @@ SPMD_SCRIPT = textwrap.dedent(
         assert np.array_equal(base.omega, sh.omega), name
         assert np.array_equal(base.edge_mask, sh.edge_mask), name
         assert sh.stats["backend"] == "spmd", sh.stats
+        be = enumerate_matches(base)
+        se = enumerate_matches(sh)  # device-resident join on the mesh
+        assert se.route == "device", se.route
+        assert np.array_equal(be.embeddings, se.embeddings), name
+        sc = enumerate_matches(sh, mode="count")
+        assert sc.n_embeddings == be.n_embeddings, name
     print("SPMD_PRUNE_OK")
     """
 )

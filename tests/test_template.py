@@ -121,3 +121,63 @@ def test_edge_deletion_variants_connected():
     assert len(vs) == 3
     for v in vs:
         assert v.m0 == 2
+
+
+# -------------------------------------------------- symmetry (automorphisms)
+def test_automorphism_group_known_templates():
+    """The orbit-refined backtracking search equals the brute-force
+    self-enumeration on templates with known groups."""
+    from repro.core.enumerate import count_automorphisms
+    from repro.core.oracle import enumerate_matches_bruteforce
+
+    cases = [
+        (Template([0, 0, 0], [(0, 1), (1, 2), (2, 0)]), 6),
+        (Template([3, 4, 3, 4], [(0, 1), (1, 2), (2, 3), (3, 0)]), 4),
+        (Template([6, 7, 8, 7], [(0, 1), (1, 2), (2, 3), (3, 0)]), 2),
+        (Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)]), 1),
+        (Template([0, 0, 0, 0],
+                  [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]), 24),
+    ]
+    for tmpl, expect in cases:
+        assert tmpl.automorphism_count() == expect
+        assert count_automorphisms(tmpl) == expect
+        # matches the old brute-force definition: self-monomorphism count
+        assert len(enumerate_matches_bruteforce(tmpl.to_graph(), tmpl)) == expect
+        # every member really is a label-preserving automorphism
+        A = tmpl.adjacency_matrix()
+        for g in tmpl.automorphisms():
+            assert sorted(g) == list(range(tmpl.n0))
+            assert all(tmpl.labels[g[q]] == tmpl.labels[q]
+                       for q in range(tmpl.n0))
+            assert all(A[g[a], g[b]] for a, b in tmpl.edge_set)
+
+
+def test_symmetry_restrictions_orbit_chain():
+    """Restriction generation follows the orbit/stabilizer chain: the product
+    of orbit sizes along the chain equals |Aut|, and the restrictions select
+    exactly one representative per automorphism class of any embedding."""
+    import itertools
+
+    for tmpl in [
+        Template([0, 0, 0], [(0, 1), (1, 2), (2, 0)]),
+        Template([3, 4, 3, 4], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+        Template([0, 0, 0, 0],
+                 [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]),
+    ]:
+        restr = tmpl.symmetry_restrictions()
+        auts = tmpl.automorphisms()
+        # apply the group to an arbitrary injective assignment: exactly one
+        # image satisfies every restriction
+        phi = list(range(10, 10 + tmpl.n0))
+        ok = 0
+        for g in auts:
+            img = [phi[g[q]] for q in range(tmpl.n0)]
+            if all(img[a] < img[b] for a, b in restr):
+                ok += 1
+        assert ok == 1, (tmpl.labels.tolist(), restr)
+
+
+def test_symmetry_restrictions_asymmetric_template_empty():
+    tmpl = Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)])
+    assert tmpl.symmetry_restrictions() == ()
+    assert tmpl.automorphism_count() == 1
