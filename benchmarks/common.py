@@ -129,6 +129,16 @@ def validate_rollup(payload: Dict) -> None:
         need(en, "materialize_seconds", (int, float), "enumeration")
         need(en, "n_embeddings", int, "enumeration")
         need(en, "count_matches_materialize", bool, "enumeration")
+    if "distributed_join" in payload:  # additive (PR 6): row-placement point
+        dj = payload["distributed_join"]
+        if not isinstance(dj, dict):
+            raise ValueError("roll-up distributed_join must be a dict")
+        need(dj, "P", int, "distributed_join")
+        need(dj, "replicated_seconds", (int, float), "distributed_join")
+        need(dj, "rowsharded_seconds", (int, float), "distributed_join")
+        need(dj, "counts_match", bool, "distributed_join")
+        need(dj, "peak_rows_replicated", int, "distributed_join")
+        need(dj, "peak_shard_rows_rowsharded", int, "distributed_join")
 
 
 def write_rollup(
@@ -140,6 +150,7 @@ def write_rollup(
     nlcc_wave: Optional[Dict] = None,
     sharded_prune: Optional[Dict] = None,
     enumeration: Optional[Dict] = None,
+    distributed_join: Optional[Dict] = None,
     policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
 ) -> str:
@@ -159,6 +170,12 @@ def write_rollup(
     enumeration-engine point (counting fast path vs materialize-then-unique)
     from benchmarks/dispatch_policy.py (additive, PR 5; the CI smoke job
     gates the count/materialize ratio)
+    distributed_join  {"P": ..., "replicated_seconds": ...,
+    "rowsharded_seconds": ..., "counts_match": ...,
+    "peak_rows_replicated": ..., "peak_shard_rows_rowsharded": ...} — the
+    replicated-vs-distributed-rows placement point from
+    benchmarks/distributed_join.py (additive, PR 6; the CI smoke job gates
+    counts_match and the per-shard memory reduction)
     policy_fallback  a previously recorded "policy" block to keep when NO
     policy is active in the registry (partial --only runs on untuned
     checkouts must not wipe the committed tuning trajectory)
@@ -186,6 +203,8 @@ def write_rollup(
         payload["sharded_prune"] = dict(sharded_prune)
     if enumeration:
         payload["enumeration"] = dict(enumeration)
+    if distributed_join:
+        payload["distributed_join"] = dict(distributed_join)
     validate_rollup(payload)
     out = path or rollup_path()
     with open(out, "w") as f:

@@ -1,0 +1,90 @@
+"""Beyond-paper: replicated vs distributed-rows placement in the sharded
+enumeration join.
+
+Both flavors run the same device-resident TDS join over the sharded
+backend's arrays; they differ ONLY in where intermediate rows live:
+
+  replicated  — the full row table on every shard, slot map psum-combined
+                (peak per-shard rows = global rows)
+  rowsharded  — each row on the shard owning its next frontier vertex, one
+                keyed `exchange_rows` per step (peak per-shard rows ~ 1/P)
+
+This suite records the wall-time crossover and the per-shard resident-row
+reduction at the benchmark scale; counts must be EQUAL (bit-parity is the
+acceptance criterion, enforced here as a hard assert). The roll-up block
+feeds BENCH_pipeline.json under the additive "distributed_join" key — the
+CI smoke job gates on counts_match and on the memory reduction, which are
+shape facts, not timing facts, so host speed cannot flake the gate."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core.template import Template
+from repro.core.pipeline import prune
+from repro.core.enumerate import enumerate_matches
+from repro.kernels import registry
+from benchmarks.common import graph_for, save
+
+P = 4
+
+# one acyclic (TDS walk) and one cyclic (symmetry-broken count) pattern
+PATTERNS = {
+    "T1-path-repeat": ([4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+    "T3-square": ([3, 4, 5, 6], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+}
+
+
+def _count(res, flavor: str):
+    stats: Dict = {}
+    t0 = time.perf_counter()
+    out = enumerate_matches(res, mode="count", route=flavor, stats=stats)
+    return out, time.perf_counter() - t0, stats
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    out: Dict = {"graph": {"n": g.n, "m": g.m}, "P": P, "patterns": {}}
+    rollup = None
+    for name, (labels, edges) in PATTERNS.items():
+        tmpl = Template(labels, edges)
+        res = prune(g, tmpl, partition=P, tds_max_rows=60_000_000)
+        for flavor in (registry.ROUTE_REPLICATED, registry.ROUTE_ROWSHARDED):
+            _count(res, flavor)  # warm-up (excludes jit compile)
+        rep, t_rep, s_rep = _count(res, registry.ROUTE_REPLICATED)
+        rsh, t_rsh, s_rsh = _count(res, registry.ROUTE_ROWSHARDED)
+        assert rep.n_embeddings == rsh.n_embeddings, (
+            name, rep.n_embeddings, rsh.n_embeddings)
+        peak_rep = int(s_rep.get("join_rows_max", 0))
+        peak_rsh = int(s_rsh.get("rowshard_peak_shard_rows", 0))
+        row = {
+            "replicated_seconds": t_rep,
+            "rowsharded_seconds": t_rsh,
+            "n_embeddings": rep.n_embeddings,
+            "counts_match": rep.n_embeddings == rsh.n_embeddings,
+            # peak resident rows per shard: replicated holds the global
+            # table everywhere; rowsharded holds one owner block
+            "peak_rows_replicated": peak_rep,
+            "peak_shard_rows_rowsharded": peak_rsh,
+            "resident_reduction": peak_rep / max(peak_rsh, 1),
+            "exchanged_rows": int(s_rsh.get("rowshard_exchanged_rows", 0)),
+            "owner_frac_max": float(s_rsh.get("rowshard_owner_frac_max", 0.0)),
+        }
+        out["patterns"][name] = row
+        if rollup is None or row["n_embeddings"] > rollup["n_embeddings"]:
+            rollup = {"P": P, "template": name, **row}
+    out["rollup"] = {
+        "P": P,
+        "replicated_seconds": rollup["replicated_seconds"],
+        "rowsharded_seconds": rollup["rowsharded_seconds"],
+        "counts_match": all(r["counts_match"]
+                            for r in out["patterns"].values()),
+        "peak_rows_replicated": rollup["peak_rows_replicated"],
+        "peak_shard_rows_rowsharded": rollup["peak_shard_rows_rowsharded"],
+    }
+    save("distributed_join", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -32,6 +32,7 @@ SUITES = [
     ("incremental", "Fig 9: naive vs PJI-X vs PJI-Y"),
     ("exploratory", "Fig 10: progressive relaxation"),
     ("enumeration_compare", "Tables 4/5: vs tree-search enumeration"),
+    ("distributed_join", "beyond-paper: replicated vs distributed-rows join"),
     ("template_sensitivity", "Table 6: template topology family"),
     ("rmat_distributions", "Table 10: R-MAT skew sweep"),
     ("frontier_edge_prune", "beyond-paper: CC edge-exactness, TDS skipped"),
@@ -92,7 +93,8 @@ def main(argv=None):
                 suites = {**prev.get("suites", {}), **suites}
                 carried = {k: prev.get(k)
                            for k in ("graph", "phases", "nlcc_wave",
-                                     "sharded_prune", "enumeration", "policy")}
+                                     "sharded_prune", "enumeration",
+                                     "distributed_join", "policy")}
         path = common.write_rollup(
             suites, args.scale,
             graph=dp.get("graph") or carried.get("graph"),
@@ -101,6 +103,9 @@ def main(argv=None):
             sharded_prune=(payloads.get("strong_scaling", {}).get("sharded_prune")
                            or carried.get("sharded_prune")),
             enumeration=dp.get("enumeration") or carried.get("enumeration"),
+            distributed_join=(
+                payloads.get("distributed_join", {}).get("rollup")
+                or carried.get("distributed_join")),
             policy_fallback=carried.get("policy"),
         )
         print(f"roll-up -> {path}")

@@ -75,16 +75,87 @@ class Prims(NamedTuple):
     all_reduce_or: Callable  # bool scalar -> OR over shards (convergence)
     psum: Callable  # int array -> sum over shards (wave survivors)
     axis_index: Callable  # () -> this shard's index
+    # [P, Br, C] keyed row buckets (leading axis = destination shard) ->
+    # received buckets (slice q = what shard q sent here). The distributed-
+    # rows join routes pow2-padded row blocks by frontier-vertex owner
+    # through this instead of psum-combining full-width slot tensors.
+    exchange_rows: Callable
+    # overlap(step, carry, max_iters) -> (carry, iters): the software-
+    # pipelined fixpoint. `step: carry -> (carry, changed)`. On the sharded
+    # backends convergence is checked on a LAGGED all_reduce_or — iteration
+    # i's flag gates iteration i+2, so the reduction is in flight while the
+    # next iteration computes. Sound for monotone sweeps: the (at most one)
+    # extra iteration past the fixpoint is a no-op by definition of the
+    # change flag.
+    overlap: Callable
+
+
+def _exchange_rows_over(axis_name: str) -> Callable:
+    """Keyed row exchange over a named axis: the same bucketed all_to_all as
+    `exchange`, shaped for [P, Br, C] row blocks (bucket q -> shard q)."""
+
+    def xr(x: jnp.ndarray) -> jnp.ndarray:
+        flat = x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+        out = jax.lax.all_to_all(flat, axis_name, 0, 0, tiled=True)
+        return out.reshape(x.shape)
+
+    return xr
+
+
+def _overlap_lagged(all_reduce_or: Callable) -> Callable:
+    """The lagged-convergence pipelined fixpoint: each iteration issues the
+    reduction of the PREVIOUS iteration's change flag before computing, so
+    the collective overlaps the sweep instead of fencing it. Converges one
+    (idempotent) iteration later than the eager schedule."""
+
+    def overlap(step: Callable, carry, max_iters: int = 1000):
+        def cond(c):
+            _, pending, _, it = c
+            return jnp.logical_and(pending, it < max_iters)
+
+        def body(c):
+            carry, _pending, ch_prev, it = c
+            pending = all_reduce_or(ch_prev)  # lagged: flag of iteration i-1
+            carry2, ch = step(carry)
+            return carry2, pending, ch, it + 1
+
+        carry, _, _, it = jax.lax.while_loop(
+            cond, body,
+            (carry, jnp.asarray(True), jnp.asarray(True), jnp.asarray(0)))
+        return carry, it
+
+    return overlap
+
+
+def _overlap_eager(step: Callable, carry, max_iters: int = 1000):
+    """P=1 pipelining degenerates to the eager do-while (reductions are
+    identities, there is nothing to overlap — and nothing to lag)."""
+
+    def cond(c):
+        _, ch, it = c
+        return jnp.logical_and(ch, it < max_iters)
+
+    def body(c):
+        carry, _, it = c
+        carry2, ch = step(carry)
+        return carry2, ch, it + 1
+
+    carry, _, it = jax.lax.while_loop(
+        cond, body, (carry, jnp.asarray(True), jnp.asarray(0)))
+    return carry, it
 
 
 def axis_prims(axis_name: str = SHARD_AXIS) -> Prims:
     """Prims over a named axis — valid under BOTH shard_map (spmd) and
     vmap-with-axis-name (sim); jax lowers the same collectives either way."""
+    all_reduce_or = lambda f: jax.lax.psum(f.astype(jnp.int32), axis_name) > 0
     return Prims(
         exchange=lambda x: jax.lax.all_to_all(x, axis_name, 0, 0, tiled=True),
-        all_reduce_or=lambda f: jax.lax.psum(f.astype(jnp.int32), axis_name) > 0,
+        all_reduce_or=all_reduce_or,
         psum=lambda x: jax.lax.psum(x, axis_name),
         axis_index=lambda: jax.lax.axis_index(axis_name),
+        exchange_rows=_exchange_rows_over(axis_name),
+        overlap=_overlap_lagged(all_reduce_or),
     )
 
 
@@ -96,6 +167,8 @@ def local_prims() -> Prims:
         all_reduce_or=lambda f: f,
         psum=lambda x: x,
         axis_index=lambda: jnp.asarray(0, jnp.int32),
+        exchange_rows=lambda x: x,
+        overlap=_overlap_eager,
     )
 
 
@@ -164,21 +237,19 @@ def lcc_shard_fixpoint(
     prims: Prims,
     max_iters: int = 1000,
 ):
-    """The LCC do-while as one on-device while_loop; the convergence flag is
-    psum-reduced — the BSP replacement for distributed quiescence detection."""
+    """The LCC do-while as one on-device while_loop, scheduled by the
+    backend's `overlap` combinator: on the sharded backends the convergence
+    psum is LAGGED one iteration behind the sweep it gates, so the reduction
+    is in flight while the next sweep computes instead of fencing it. The
+    sweep is monotone (omega / edge bits only clear), so the one extra
+    iteration past the fixpoint recomputes the fixpoint — a no-op."""
 
-    def cond(c):
-        _, _, changed, it = c
-        return jnp.logical_and(changed, it < max_iters)
-
-    def body(c):
-        om, ea, _, it = c
+    def step(c):
+        om, ea = c
         om2, ea2, ch = lcc_shard_iteration(om, ea, sa, tm, prims)
-        return om2, ea2, prims.all_reduce_or(ch), it + 1
+        return (om2, ea2), ch
 
-    om, ea, _, it = jax.lax.while_loop(
-        cond, body, (omega, edge_active, jnp.asarray(True), jnp.asarray(0))
-    )
+    (om, ea), it = prims.overlap(step, (omega, edge_active), max_iters)
     return om, ea, it
 
 
@@ -773,19 +844,38 @@ class _ShardedBackend:
         keep_cols = [jnp.zeros((self.P, self.n_local + 1), bool) for _ in walks]
         n_waves = 0
         n_tokens = 0
+        n_overlapped = 0
         for wi, walk in enumerate(walks):
             cand = self._cand_stack(walk)
             is_cyclic = walk[0] == walk[-1]
             sources = np.flatnonzero(head_global[wi])
-            for off in range(0, sources.size, self.wave):
-                ids = sources[off: off + self.wave]
-                pad = self.wave - ids.size
-                idsp = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+            # one-wave-deep software pipeline (the `overlap` schedule): wave
+            # i's survivor reduction (the only psum) is dispatched together
+            # with / after wave i+1's hop exchanges — the two touch disjoint
+            # state, so the collective overlaps the next wave's compute
+            # instead of fencing it. `pending` = the frontier awaiting its
+            # survivor decision; flushed at the walk boundary.
+            pending = None
+            for idsp, n_real in nlcc_mod.wave_batches(sources, self.wave):
                 ids_dev = jnp.asarray(idsp, jnp.int32)
-                keep_cols[wi] = self._run_wave(
-                    route, L, is_cyclic, cand, keep_cols[wi], ids_dev)
+                if route == _registry.ROUTE_FUSED and pending is not None:
+                    keep_cols[wi], f = self._wave_overlapped(
+                        L, is_cyclic, cand, keep_cols[wi],
+                        pending[0], pending[1], ids_dev)
+                    n_overlapped += 1
+                else:
+                    f = self._wave_frontier(route, L, cand, ids_dev)
+                    if pending is not None:
+                        keep_cols[wi] = self._wave_finish(
+                            route, is_cyclic, pending[0], keep_cols[wi],
+                            pending[1])
+                        n_overlapped += 1
+                pending = (f, ids_dev)
                 n_waves += 1
-                n_tokens += int(ids.size)
+                n_tokens += n_real
+            if pending is not None:
+                keep_cols[wi] = self._wave_finish(
+                    route, is_cyclic, pending[0], keep_cols[wi], pending[1])
         # remove head candidacy from failing sources (Alg. 5 line 8), on device
         omega = self.omega_all
         for wi, q0 in enumerate(heads):
@@ -800,34 +890,62 @@ class _ShardedBackend:
             cstats[wave_stat] = cstats.get(wave_stat, 0) + n_waves
             cstats["nlcc_constraints"] = cstats.get("nlcc_constraints", 0) + 1
             cstats["nlcc_waves"] = cstats.get("nlcc_waves", 0) + n_waves
+            cstats["nlcc_overlapped_waves"] = (
+                cstats.get("nlcc_overlapped_waves", 0) + n_overlapped)
             cstats["nlcc_host_syncs"] = cstats.get("nlcc_host_syncs", 0) + 1
         return jnp.any(omega_before != self.omega_all) | jnp.any(
             ea_before != self.ea_all)
 
-    def _run_wave(self, route, L, is_cyclic, cand, keep_col, ids_dev):
+    # -- wave pipeline stages ----------------------------------------------
+    def _frontier_program(self, L):
+        """Per-shard hop phase of one wave: seed + L hops, returning the
+        hop-L packed frontier WITHOUT the survivor decision (that belongs to
+        the pipelined finish stage)."""
+        n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
+
+        def program(sa_dict, ea, cand_stack, source_ids):
+            sa = ShardArrays(**sa_dict)
+            p = prims.axis_index()
+            fp = pack_bits(_seed_frontier_planes(
+                cand_stack[0], source_ids, n_local, p))
+
+            def hop(f, cand_r):
+                return frontier_shard_hop(f, ea, sa, cand_r, prims), None
+
+            fp, _ = jax.lax.scan(hop, fp, cand_stack[1:])
+            return fp
+
+        return program
+
+    def _finish_program(self, packed, is_cyclic):
+        """Survivor decision + keep-column scatter for one completed wave
+        frontier (the wave's only psum)."""
+        n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
+
+        def finish(f, keep, source_ids):
+            p = prims.axis_index()
+            if packed:
+                planes = jnp.concatenate([
+                    unpack_bits(f[:n_local], source_ids.shape[0]),
+                    jnp.zeros((1, source_ids.shape[0]), bool)], axis=0)
+            else:
+                planes = f
+            survived = _sharded_wave_survivors(
+                planes, source_ids, n_local, is_cyclic, prims)
+            return _scatter_keep(keep, survived, source_ids, n_local, p)
+
+        return finish
+
+    def _wave_frontier(self, route, L, cand, ids_dev):
+        """Dispatch the hop phase of one wave; returns the hop-L frontier
+        (packed words or boolean planes)."""
         from repro.kernels import registry as _registry
 
         n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
         if route == _registry.ROUTE_FUSED:
-            def program(sa_dict, ea, cand_stack, keep, source_ids):
-                sa = ShardArrays(**sa_dict)
-                p = prims.axis_index()
-                fp = pack_bits(_seed_frontier_planes(
-                    cand_stack[0], source_ids, n_local, p))
-
-                def hop(f, cand_r):
-                    return frontier_shard_hop(f, ea, sa, cand_r, prims), None
-
-                fp, _ = jax.lax.scan(hop, fp, cand_stack[1:])
-                planes = jnp.concatenate([
-                    unpack_bits(fp[:n_local], source_ids.shape[0]),
-                    jnp.zeros((1, source_ids.shape[0]), bool)], axis=0)
-                survived = _sharded_wave_survivors(
-                    planes, source_ids, n_local, is_cyclic, prims)
-                return _scatter_keep(keep, survived, source_ids, n_local, p)
-
-            fn = self._fn(("wave_fused", L, is_cyclic), program, n_sharded=4)
-            return fn(self.arrs, self.ea_all, cand, keep_col, ids_dev)
+            fn = self._fn(("wave_front_fused", L),
+                          self._frontier_program(L), n_sharded=3)
+            return fn(self.arrs, self.ea_all, cand, ids_dev)
 
         packed = route == _registry.ROUTE_PACKED
 
@@ -842,25 +960,40 @@ class _ShardedBackend:
                 return frontier_shard_hop(f, ea, sa, cand_r, prims)
             return frontier_shard_hop_unpacked(f, ea, sa, cand_r, prims)
 
-        def finish(f, keep, source_ids):
-            p = prims.axis_index()
-            if packed:
-                planes = jnp.concatenate([
-                    unpack_bits(f[:n_local], source_ids.shape[0]),
-                    jnp.zeros((1, source_ids.shape[0]), bool)], axis=0)
-            else:
-                planes = f
-            survived = _sharded_wave_survivors(
-                planes, source_ids, n_local, is_cyclic, prims)
-            return _scatter_keep(keep, survived, source_ids, n_local, p)
-
         seed_fn = self._fn(("wave_seed", packed), seed, n_sharded=1)
         hop_fn = self._fn(("wave_hop", packed), hop, n_sharded=4)
-        finish_fn = self._fn(("wave_finish", packed, is_cyclic), finish, n_sharded=2)
         f = seed_fn(cand[:, 0], ids_dev)
         for r in range(1, L + 1):
             f = hop_fn(self.arrs, self.ea_all, f, cand[:, r])
-        return finish_fn(f, keep_col, ids_dev)
+        return f
+
+    def _wave_finish(self, route, is_cyclic, f, keep_col, ids_dev):
+        from repro.kernels import registry as _registry
+
+        packed = route in (_registry.ROUTE_FUSED, _registry.ROUTE_PACKED)
+        fn = self._fn(("wave_finish", packed, is_cyclic),
+                      self._finish_program(packed, is_cyclic), n_sharded=2)
+        return fn(f, keep_col, ids_dev)
+
+    def _wave_overlapped(self, L, is_cyclic, cand, keep_col, f_prev, ids_prev,
+                         ids_cur):
+        """Fused route, steady state: ONE dispatch that finishes wave i-1
+        (its survivor psum) AND runs wave i's seed + hop scan. The two
+        dataflows are independent inside the program, so XLA schedules the
+        reduction concurrently with the hop exchanges — the wave-level
+        `overlap` schedule."""
+        front = self._frontier_program(L)
+        finish = self._finish_program(True, is_cyclic)
+
+        def program(sa_dict, ea, cand_stack, keep, f_pending, prev_ids,
+                    cur_ids):
+            keep2 = finish(f_pending, keep, prev_ids)
+            f_cur = front(sa_dict, ea, cand_stack, cur_ids)
+            return keep2, f_cur
+
+        fn = self._fn(("wave_fused_ov", L, is_cyclic), program, n_sharded=5)
+        return fn(self.arrs, self.ea_all, cand, keep_col, f_prev,
+                  ids_prev, ids_cur)
 
     # -- enumeration join ---------------------------------------------------
     def join_context(self):

@@ -89,19 +89,38 @@ def count_automorphisms(template: Template) -> int:
 
 
 def _resolve_route(kind: str, mode: str, route: Optional[str]) -> str:
+    """Resolve the join route. Local kind: "host" | "device". Sharded kind:
+    always device-resident, refined to a row-placement flavor —
+    "rowsharded" (rows live on their frontier-owner shard, exchanged per
+    step; ~1/P per-shard memory, the default) or "replicated" (full row
+    table on every shard, slots psum-combined) — via the dispatch policy's
+    ("sharded", mode) bucket. route= pins any of the four explicitly."""
     from repro.kernels import registry
 
+    flavors = (registry.ROUTE_ROWSHARDED, registry.ROUTE_REPLICATED)
     if route is not None:
-        if route not in (registry.ROUTE_HOST, registry.ROUTE_DEVICE):
+        if route not in (registry.ROUTE_HOST, registry.ROUTE_DEVICE) + flavors:
             raise ValueError(f"unknown enumerate.join route {route!r}")
         if kind == "sharded" and route == registry.ROUTE_HOST:
             raise ValueError(
                 "the sharded enumeration join is device-resident; route="
                 "'host' would gather the reduced subgraph")
-        return route
+        if kind != "sharded" and route in flavors:
+            raise ValueError(
+                f"route={route!r} is a sharded row placement; the local "
+                "backend has no shards to place rows on")
+        if route in flavors:
+            return route
+        if kind == "sharded":  # route="device": the policy picks the flavor
+            route = None
+        else:
+            return route
     if kind == "sharded":
-        # always device-resident: the whole point is never gathering G*
-        return registry.ROUTE_DEVICE
+        # always device-resident (the whole point is never gathering G*);
+        # the tunable decision is the row placement
+        return registry.resolve_route(
+            ENUM_ROUTE, (kind, mode), default=registry.ROUTE_ROWSHARDED,
+            allowed=flavors)
     return registry.resolve_route(
         ENUM_ROUTE, (kind, mode), default=registry.ROUTE_HOST,
         allowed=(registry.ROUTE_HOST, registry.ROUTE_DEVICE))
@@ -127,11 +146,25 @@ def _backend_kind(backend) -> str:
             in ("sim", "spmd", "sharded") else "local")
 
 
+def _public_route(route: str) -> str:
+    """What `EnumerationResult.route` / stats report: the sharded row
+    placements are flavors of the device route, not separate routes."""
+    from repro.kernels import registry
+
+    if route in (registry.ROUTE_ROWSHARDED, registry.ROUTE_REPLICATED):
+        return registry.ROUTE_DEVICE
+    return route
+
+
 def _make_engine(route, kind, dg, state, template, walk, max_rows,
                  symmetry_break, backend, stats):
     from repro.kernels import registry
 
-    if route == registry.ROUTE_DEVICE:
+    if route == registry.ROUTE_ROWSHARDED:
+        return join_mod.RowShardedJoin(
+            backend.join_context(), template, walk, max_rows,
+            symmetry_break=symmetry_break, stats=stats)
+    if route in (registry.ROUTE_DEVICE, registry.ROUTE_REPLICATED):
         ctx = (backend.join_context() if kind == "sharded"
                else join_mod.LocalJoinContext(dg, state))
         return join_mod.DeviceJoin(ctx, template, walk, max_rows,
@@ -224,10 +257,13 @@ def enumerate_matches(
 
     kind = _backend_kind(backend)
     route = _resolve_route(kind, mode, route)
+    public = _public_route(route)
     sb = symmetry_break if symmetry_break is not None else (mode == MODE_COUNT)
     if stats is not None:
-        stats["enumerate_route"] = route
+        stats["enumerate_route"] = public
         stats["enumerate_mode"] = mode
+        if kind == "sharded":
+            stats["enumerate_join_engine"] = route
     walk = template_walk(template, label_freq)
 
     if (mode == MODE_MATERIALIZE and not sb
@@ -245,7 +281,7 @@ def enumerate_matches(
         n_emb = total * aut if sb else total
         return EnumerationResult(
             np.zeros((0, template.n0), np.int32), n_emb, -1, aut,
-            mode=mode, route=route, n_canonical=(total if sb else None))
+            mode=mode, route=public, n_canonical=(total if sb else None))
     if blocks:
         emb = np.unique(np.concatenate(blocks, axis=0), axis=0)
     else:
@@ -257,7 +293,7 @@ def enumerate_matches(
         n_embeddings=n_emb,
         n_distinct_vertex_sets=vsets.shape[0],
         automorphisms=aut,
-        mode=mode, route=route,
+        mode=mode, route=public,
         n_canonical=(emb.shape[0] if sb else None),
     )
 
@@ -295,8 +331,10 @@ def stream_matches(
     kind = _backend_kind(backend)
     route = _resolve_route(kind, MODE_STREAM, route)
     if stats is not None:
-        stats["enumerate_route"] = route
+        stats["enumerate_route"] = _public_route(route)
         stats["enumerate_mode"] = MODE_STREAM
+        if kind == "sharded":
+            stats["enumerate_join_engine"] = route
     walk = template_walk(template, label_freq)
     engine = _make_engine(route, kind, dg, state, template, walk, max_rows,
                           symmetry_break, backend, stats)

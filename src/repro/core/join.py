@@ -100,6 +100,21 @@ def _pow2(x: int) -> int:
     return b
 
 
+_INT32_MAX = 2**31 - 1
+
+
+def _guard_int32(count: int, what: str) -> None:
+    """Slot indices, psum-combined keep bits, and exchange bucket offsets are
+    int32 on device (x64 is off by default) — a count past 2^31 would wrap
+    silently. Mirror of the engine's slot-map guard: fail loudly and name the
+    remedies instead of returning garbage."""
+    if count > _INT32_MAX:
+        raise NotImplementedError(
+            f"{what} = {count} exceeds int32; the join's device-side slot "
+            "indices and psum-combined counts would overflow — shard finer, "
+            "lower max_rows / the streaming budget, or add a 64-bit slot map")
+
+
 # -------------------------------------------------- per-shard join programs
 def _prims(axis_name: Optional[str]):
     from repro.core import engine as engine_mod
@@ -190,6 +205,162 @@ def _cols_program(axis_name: Optional[str], qs: Tuple[int, ...], n_local: int,
     return program
 
 
+# ----------------------------------------------- row-sharded join programs
+# The distributed-rows join (RowShardedJoin): each shard holds ONLY the rows
+# whose next frontier vertex it owns (owner = v // n_local — the partition's
+# block rule, so the owner also holds every arc of v in its join-plan CSR).
+# Expansion is then purely local — no psum over full-width slot tensors; the
+# only per-step collective is ONE `exchange_rows` routing the surviving rows
+# to their next owners in pow2-padded buckets sized by host-readable counts.
+# The once-per-join candidacy-column all-gather (`_cols_program`) stays the
+# only replicated state.
+def _owner_counts(vals, ok, n_local: int, P: int) -> jnp.ndarray:
+    """int32[P] rows per next-owner shard (pads/drops excluded) — the bucket
+    sizes of the next `exchange_rows`, read back by the host."""
+    owner = jnp.where(ok, vals // n_local, P).astype(jnp.int32)
+    oh = owner[:, None] == jnp.arange(P, dtype=jnp.int32)[None, :]
+    return jnp.sum(oh.astype(jnp.int32), axis=0)
+
+
+def _rowshard_expand_program(axis_name: Optional[str], step: JoinStep,
+                             n_local: int, P: int, oc: Optional[int]):
+    """One expansion step over the OWNED row block: by the ownership
+    invariant every real row's frontier vertex is shard-local, so the CSR
+    read needs no collective at all. Returns per-slot (vertex, keep) plus
+    the next-owner bucket counts (`oc` = next frontier column in the widened
+    row layout; None on the walk's last step, where the count is scalar)."""
+
+    def program(plan, arc_active, rows, parent, j, cand_col, deg):
+        prims = _prims(axis_name)
+        p = prims.axis_index()
+        A = plan["arc_dst"].shape[0]
+        up = jnp.take(rows[:, step.c_prev], parent)  # frontier vertex, local
+        u_lo = jnp.clip(up - p * n_local, 0, n_local)  # sink rows -> pad row
+        start = jnp.take(plan["csr_off"], u_lo)
+        idx = jnp.minimum(start + j, A - 1)
+        v = jnp.take(plan["arc_dst"], idx)
+        ok = (j < jnp.take(deg, up)) & jnp.take(arc_active, idx)
+        ok &= jnp.take(cand_col, jnp.minimum(v, cand_col.shape[0] - 1))
+        for c in range(step.n_cols):  # injectivity vs every assigned column
+            ok &= v != jnp.take(rows[:, c], parent)
+        for col, op in step.restr:  # symmetry restrictions, in-flight
+            ref = jnp.take(rows[:, col], parent)
+            ok &= (v > ref) if op == "gt" else (v < ref)
+        vi = jnp.where(ok, v, 0).astype(jnp.int32)
+        if oc is None:
+            cnt = jnp.sum(ok.astype(jnp.int32))[None]
+        else:
+            nf = vi if oc == step.n_cols else jnp.take(rows[:, oc], parent)
+            cnt = _owner_counts(nf, ok, n_local, P)
+        return vi, ok, cnt
+
+    return program
+
+
+def _rowshard_revisit_program(axis_name: Optional[str], step: JoinStep,
+                              n_local: int, iters: int, P: int,
+                              oc: Optional[int]):
+    """One revisit step over the OWNED row block: shard-local binary search
+    of the (src, dst-global)-sorted CSR — no psum of keep bits."""
+
+    def program(plan, arc_active, rows, deg):
+        prims = _prims(axis_name)
+        p = prims.axis_index()
+        A = plan["arc_dst"].shape[0]
+        u = rows[:, step.c_prev]
+        v = rows[:, step.c_tgt]
+        u_lo = jnp.clip(u - p * n_local, 0, n_local)
+        lo0 = jnp.take(plan["csr_off"], u_lo)
+        dv = jnp.take(deg, u)  # sink rows -> degree 0
+        lo, hi = lo0, lo0 + dv
+        for _ in range(iters):  # vectorized lower_bound over the CSR segment
+            cont = lo < hi
+            mid = (lo + hi) // 2
+            less = jnp.take(plan["arc_dst"], jnp.minimum(mid, A - 1)) < v
+            lo = jnp.where(cont & less, mid + 1, lo)
+            hi = jnp.where(cont & ~less, mid, hi)
+        li = jnp.minimum(lo, A - 1)
+        found = (lo < lo0 + dv) & (jnp.take(plan["arc_dst"], li) == v)
+        keep = found & jnp.take(arc_active, li)
+        if oc is None:
+            cnt = jnp.sum(keep.astype(jnp.int32))[None]
+        else:
+            cnt = _owner_counts(rows[:, oc], keep, n_local, P)
+        return keep, cnt
+
+    return program
+
+
+def _rowshard_route_program(axis_name: Optional[str], n_local: int, P: int,
+                            Br: int, Rb2: int, oc: int, expand: bool):
+    """Route surviving rows to their next-owner shards: stable-sort slots by
+    owner, lay them into [P, Br] buckets sized from the host-read count
+    matrix (pad — NEVER drop: Br >= every bucket's occupancy by
+    construction), ONE `exchange_rows`, then compact the received buckets
+    into the next pow2 block. Bucket layout is derived from `cnt` alone, so
+    shapes are static and the layout is deterministic."""
+    n_pad = P * n_local
+
+    def route(cand_rows, ok, cnt, prims):
+        p = prims.axis_index()
+        Cw = cand_rows.shape[1]
+        nf = cand_rows[:, oc]
+        owner = jnp.where(ok, nf // n_local, P).astype(jnp.int32)
+        order = jnp.argsort(owner)  # stable: kept rows by owner, pads last
+        cnt_out = cnt[p]  # [P] rows this shard sends to each owner
+        start = jnp.concatenate([
+            jnp.zeros((1,), jnp.int32),
+            jnp.cumsum(cnt_out)[:-1].astype(jnp.int32)])
+        b = jnp.arange(Br, dtype=jnp.int32)
+        src = start[:, None] + b[None, :]  # [P, Br] slot in sorted order
+        valid = b[None, :] < cnt_out[:, None]
+        idx = jnp.take(order, jnp.minimum(src, order.shape[0] - 1))
+        send = jnp.take(cand_rows, idx.reshape(-1), axis=0).reshape(P, Br, Cw)
+        send = jnp.where(valid[..., None], send, jnp.int32(n_pad))
+        recv = prims.exchange_rows(send)  # [P, Br]: slice q = from shard q
+        cnt_in = cnt[:, p]  # [P] rows each shard sent here
+        mask = (b[None, :] < cnt_in[:, None]).reshape(-1)
+        sel = jnp.nonzero(mask, size=Rb2, fill_value=P * Br)[0]
+        flat = jnp.concatenate([
+            recv.reshape(P * Br, Cw),
+            jnp.full((1, Cw), n_pad, jnp.int32)], axis=0)
+        return jnp.take(flat, sel, axis=0)  # [Rb2, Cw], sinks past the count
+
+    if expand:
+        def program(rows, parent, newv, ok, cnt):
+            prims = _prims(axis_name)
+            prow = jnp.take(rows, parent, axis=0)
+            cand_rows = jnp.concatenate([prow, newv[:, None]], axis=1)
+            return route(cand_rows, ok, cnt, prims)
+    else:
+        def program(rows, ok, cnt):
+            return route(rows, ok, cnt, _prims(axis_name))
+    return program
+
+
+def _rowshard_tail_program(axis_name: Optional[str], n_local: int, P: int,
+                           Kp: int, expand: bool):
+    """The walk's last step has no next owner: compact the surviving slots
+    into the final per-shard block in slot order (no exchange)."""
+    n_pad = P * n_local
+
+    def compact(cand_rows, ok):
+        sel = jnp.nonzero(ok, size=Kp, fill_value=ok.shape[0])[0]
+        flat = jnp.concatenate([
+            cand_rows,
+            jnp.full((1, cand_rows.shape[1]), n_pad, jnp.int32)], axis=0)
+        return jnp.take(flat, sel, axis=0)
+
+    if expand:
+        def program(rows, parent, newv, ok):
+            prow = jnp.take(rows, parent, axis=0)
+            return compact(jnp.concatenate([prow, newv[:, None]], axis=1), ok)
+    else:
+        def program(rows, ok):
+            return compact(rows, ok)
+    return program
+
+
 # ------------------------------------------------------------ join contexts
 # Compiled local join programs, shared across LocalJoinContext instances
 # (one context is built per enumerate_matches call — without this cache every
@@ -264,17 +435,20 @@ class ShardedJoinContext:
         self._backend = backend
         part = backend.part
         plan = part.join_plan()
+        dev = part.join_plan_dev()  # static arrays uploaded once per partition
+        self.part = part
+        self.P = part.P
         self.n_local = part.n_local
         self.n_pad = plan.n_pad
         self.A = plan.A
         self.plan = {
-            "csr_off": jnp.asarray(plan.csr_off),
-            "arc_dst": jnp.asarray(plan.arc_dst),
+            "csr_off": dev["csr_off"],
+            "arc_dst": dev["arc_dst"],
         }
-        self.deg = jnp.asarray(plan.deg)
+        self.deg = dev["deg"]
+        self.row_plan = part.row_plan()
         ea_flat = backend.ea_all.reshape(part.P, plan.A)
-        self.arc_active = jnp.take_along_axis(
-            ea_flat, jnp.asarray(plan.perm), axis=1)
+        self.arc_active = jnp.take_along_axis(ea_flat, dev["perm"], axis=1)
         self._fns: Dict = {}
 
     def cols(self, qs: Tuple[int, ...]) -> jnp.ndarray:
@@ -293,6 +467,13 @@ class ShardedJoinContext:
             self._fns[key] = lambda *a: jax.tree_util.tree_map(
                 lambda x: x[0], inner(*a))
         return self._fns[key]
+
+    def wrap_rows(self, key, factory: Callable, n_sharded: int) -> Callable:
+        """Like `wrap`, but outputs stay PER-SHARD [P, ...] — the row-sharded
+        join's blocks differ across shards by construction (that is the
+        point), so nothing may be collapsed to shard 0's copy."""
+        rkey = ("rows",) + (key if isinstance(key, tuple) else (key,))
+        return self._backend._fn(rkey, factory(self.axis_name), n_sharded)
 
 
 # ------------------------------------------------------------- join engines
@@ -368,11 +549,11 @@ class DeviceJoin:
         # count); the exact capacity is read back as one scalar per step.
         # Sink pad rows have degree 0 — they occupy no slots.
         deg_h = np.asarray(jnp.take(self.ctx.deg, rows.data[:, s.c_prev]))
-        cum_h = np.cumsum(deg_h, dtype=np.int64)
-        T = int(cum_h[-1]) if cum_h.size else 0
+        cum_h, T = tds_mod.expansion_slots(deg_h)
         if enforce and T > self.max_rows:
             raise TdsOverflow(
                 f"join capacity {T} > max_rows={self.max_rows} at step {r}")
+        _guard_int32(T, f"join expansion capacity at step {r}")
         if T == 0:
             return RowBlock(jnp.zeros((0, s.n_cols + 1), jnp.int32), 0)
         cum = jnp.asarray(cum_h.astype(np.int32))
@@ -436,6 +617,230 @@ class DeviceJoin:
 
     def count(self, rows: RowBlock) -> int:
         return rows.k
+
+
+class ShardedRowBlock:
+    """The distributed row table: device data [P, Rb, C] (per-shard pow2
+    blocks, rows past a shard's count are inert sink rows) + host per-shard
+    counts. Peak per-shard resident rows = Rb = pow2(max_p k_p) — for a
+    balanced frontier ~1/P of the replicated table's height."""
+
+    __slots__ = ("data", "counts")
+
+    def __init__(self, data, counts: np.ndarray):
+        self.data = data
+        self.counts = np.asarray(counts, np.int64)
+
+    @property
+    def k(self) -> int:
+        return int(self.counts.sum())
+
+
+class RowShardedJoin:
+    """The distributed-rows device join over a ShardedJoinContext.
+
+    Invariant: every real row lives on the shard owning its NEXT frontier
+    vertex (RowPlan's block rule), so each step's CSR expansion / revisit
+    probe is purely shard-local. Per step the host reads ONE [P, P] (or
+    [P, 1]) count matrix to size static bucket shapes, then one
+    `exchange_rows` routes survivors to their next owners. Slot layout comes
+    from the same static degrees as the replicated engine
+    (`tds.expansion_slots`), so counts and row SETS are bit-identical to
+    `DeviceJoin` / `HostJoin` on any shard count — only placement (and
+    therefore emission order, erased by the caller's np.unique) differs.
+    The candidacy-column all-gather (`ctx.cols`) is the only replicated
+    state."""
+
+    route = "device"
+    engine = "rowsharded"
+
+    def __init__(self, ctx, template: Template, walk: Sequence[int],
+                 max_rows: int, symmetry_break: bool = False,
+                 stats: Optional[Dict] = None):
+        if not hasattr(ctx, "row_plan"):
+            raise ValueError(
+                "RowShardedJoin needs a ShardedJoinContext (a row-ownership "
+                "plan); the local backend has no rows to distribute")
+        restr = template.symmetry_restrictions() if symmetry_break else ()
+        self.steps, self.seen_q = walk_steps(walk, restr)
+        self.ctx = ctx
+        self.template = template
+        self.max_rows = max_rows
+        self.stats = stats
+        self.walk0 = walk[0]
+        self.cand = ctx.cols(tuple(self.seen_q))  # the one replicated state
+        self.P = ctx.P
+        self.n_local = ctx.n_local
+        self.n_pad = ctx.n_pad
+        self.rp = ctx.row_plan
+        self._rv_iters = max(int(np.ceil(np.log2(max(ctx.A, 2)))) + 1, 1)
+
+    # -- step metadata ------------------------------------------------------
+    def _next_owner_col(self, r: int) -> Optional[int]:
+        """Column (in the row layout AFTER step r) holding step r+1's
+        frontier vertex — the routing key; None after the last step."""
+        if r >= len(self.steps):
+            return None
+        return self.steps[r].c_prev
+
+    def _stat_max(self, key: str, val) -> None:
+        if self.stats is not None:
+            self.stats[key] = max(self.stats.get(key, 0), val)
+
+    def _record_block(self, counts: np.ndarray, resident: int) -> None:
+        total = int(counts.sum())
+        self._stat_max("join_rows_max", total)
+        self._stat_max("rowshard_resident_rows_max", resident)
+        self._stat_max("rowshard_peak_shard_rows", int(counts.max()))
+        if self.stats is not None and total:
+            frac = float(counts.max()) / float(total)
+            self.stats["rowshard_owner_frac_max"] = max(
+                self.stats.get("rowshard_owner_frac_max", 0.0), frac)
+
+    def _shard_host_rows(self, rows_np: np.ndarray,
+                         owner_col: int) -> ShardedRowBlock:
+        data, counts = self.rp.shard_rows(rows_np, owner_col, _pow2)
+        self._record_block(counts, data.shape[1])
+        return ShardedRowBlock(jnp.asarray(data), counts)
+
+    # -- engine API ---------------------------------------------------------
+    def sources(self) -> np.ndarray:
+        return np.flatnonzero(np.asarray(self.cand[0][:-1]))
+
+    def seed(self, ids: np.ndarray) -> ShardedRowBlock:
+        rows = np.asarray(ids, np.int32).reshape(-1, 1)
+        # step 1's frontier is column 0 — seeds go straight to their owner
+        return self._shard_host_rows(rows, 0)
+
+    def nrows(self, rows: ShardedRowBlock) -> int:
+        return rows.k
+
+    def count(self, rows: ShardedRowBlock) -> int:
+        return rows.k
+
+    def _empty(self, width: int) -> ShardedRowBlock:
+        data = jnp.full((self.P, 1, width), self.n_pad, jnp.int32)
+        return ShardedRowBlock(data, np.zeros(self.P, np.int64))
+
+    def step(self, rows: ShardedRowBlock, r: int,
+             enforce: bool = True) -> ShardedRowBlock:
+        s = self.steps[r - 1]
+        oc = self._next_owner_col(r)
+        expand = s.kind == "expand"
+        width = s.n_cols + (1 if expand else 0)
+        if expand:
+            # host capacity math from the STATIC degree table — identical to
+            # the replicated engine's layout, summed over shards
+            fcol = np.asarray(rows.data[:, :, s.c_prev])  # [P, Rb]
+            deg_sh = self.rp.deg[fcol]  # int64; sink rows -> 0
+            cums = [tds_mod.expansion_slots(d) for d in deg_sh]
+            t_p = np.asarray([t for _, t in cums], np.int64)
+            T = int(t_p.sum())
+            if enforce and T > self.max_rows:
+                raise TdsOverflow(
+                    f"join capacity {T} > max_rows={self.max_rows} "
+                    f"at step {r}")
+            _guard_int32(int(t_p.max()) if t_p.size else 0,
+                         f"per-shard join expansion capacity at step {r}")
+            if T == 0:
+                return self._empty(width)
+            Tb = _pow2(max(int(t_p.max()), 1))
+            par = np.empty((self.P, Tb), np.int32)
+            jj = np.empty((self.P, Tb), np.int32)
+            for p in range(self.P):
+                par[p], jj[p] = tds_mod.slot_parents(
+                    cums[p][0], deg_sh[p], Tb)
+            fn = self.ctx.wrap_rows(
+                ("rsj_ex",) + s.key() + (oc,),
+                lambda axis: _rowshard_expand_program(
+                    axis, s, self.n_local, self.P, oc),
+                n_sharded=5,
+            )
+            par_dev = jnp.asarray(par)
+            newv, ok, cnt = fn(self.ctx.plan, self.ctx.arc_active, rows.data,
+                               par_dev, jnp.asarray(jj),
+                               self.cand[s.c_tgt], self.ctx.deg)
+            if self.stats is not None:
+                self.stats["join_expansions"] = (
+                    self.stats.get("join_expansions", 0) + T)
+            args = (rows.data, par_dev, newv, ok)
+        else:
+            fn = self.ctx.wrap_rows(
+                ("rsj_rv",) + s.key() + (oc,),
+                lambda axis: _rowshard_revisit_program(
+                    axis, s, self.n_local, self._rv_iters, self.P, oc),
+                n_sharded=3,
+            )
+            ok, cnt = fn(self.ctx.plan, self.ctx.arc_active, rows.data,
+                         self.ctx.deg)
+            args = (rows.data, ok)
+
+        cnt = np.asarray(cnt, np.int64)  # [P, P] (or [P, 1] on the tail)
+        k_total = int(cnt.sum())
+        if enforce and k_total > self.max_rows:
+            raise TdsOverflow(
+                f"join rows {k_total} > max_rows={self.max_rows}")
+        if k_total == 0:
+            return self._empty(width)
+
+        if oc is None:  # last step: per-shard compaction, no exchange
+            k_p = cnt[:, 0]
+            Kp = _pow2(max(int(k_p.max()), 1))
+            tail = self.ctx.wrap_rows(
+                ("rsj_tail", expand, width, Kp),
+                lambda axis: _rowshard_tail_program(
+                    axis, self.n_local, self.P, Kp, expand),
+                n_sharded=len(args),
+            )
+            out = ShardedRowBlock(tail(*args), k_p)
+            self._record_block(k_p, Kp)
+            return out
+
+        # exchange buckets sized from the count matrix: Br bounds every
+        # (sender, owner) bucket, Rb2 every shard's received total — rows
+        # are PADDED into place, never dropped
+        k_in = cnt.sum(axis=0)  # rows each owner receives
+        Br = _pow2(max(int(cnt.max()), 1))
+        Rb2 = _pow2(max(int(k_in.max()), 1))
+        _guard_int32(self.P * Br, f"exchange bucket slots at step {r}")
+        route_fn = self.ctx.wrap_rows(
+            ("rsj_route", expand, width, oc, Br, Rb2),
+            lambda axis: _rowshard_route_program(
+                axis, self.n_local, self.P, Br, Rb2, oc, expand),
+            n_sharded=len(args),
+        )
+        out = ShardedRowBlock(route_fn(*args, jnp.asarray(cnt, jnp.int32)),
+                              k_in)
+        self._record_block(k_in, Rb2)
+        if self.stats is not None:
+            off_shard = k_total - int(np.trace(cnt))
+            self.stats["rowshard_exchanged_rows"] = (
+                self.stats.get("rowshard_exchanged_rows", 0) + off_shard)
+            self._stat_max("rowshard_bucket_cap", Br)
+            self._stat_max("rowshard_bucket_occupancy_max", int(cnt.max()))
+        return out
+
+    def split(self, rows: ShardedRowBlock, r: int,
+              budget: int) -> List[ShardedRowBlock]:
+        s = self.steps[r - 1]
+        if s.kind == "revisit" or rows.k <= 1:
+            return [rows]
+        # the streaming path is host-synced per block anyway (blocks are
+        # emitted to the host): gather, split by global capacity with the
+        # shared planner, re-shard each piece by its current owner column
+        host = self._gather(rows)
+        cap = self.rp.deg[host[:, s.c_prev]]
+        return [self._shard_host_rows(piece, s.c_prev)
+                for piece in _split_by_capacity(host, cap, budget)]
+
+    def _gather(self, rows: ShardedRowBlock) -> np.ndarray:
+        d = np.asarray(rows.data)
+        return np.concatenate(
+            [d[p, :int(c)] for p, c in enumerate(rows.counts)], axis=0)
+
+    def emit(self, rows: ShardedRowBlock) -> np.ndarray:
+        perm = [self.seen_q.index(q) for q in range(self.template.n0)]
+        return self._gather(rows)[:, perm].astype(np.int32)
 
 
 class HostJoin:

@@ -59,6 +59,18 @@ def _frontier_hop(
     return nxt, n_msgs
 
 
+def wave_batches(sources: np.ndarray, wave: int):
+    """Pad wave-source ids into fixed-width batches (-1 = pad) — the one
+    batching rule shared by the local and sharded wave executors, so every
+    route sees identical static shapes and identical pad semantics."""
+    for off in range(0, sources.size, wave):
+        ids = sources[off: off + wave]
+        pad = wave - ids.size
+        idsp = (np.concatenate([ids, np.full(pad, -1, np.int64)])
+                if pad else ids)
+        yield idsp.astype(np.int32), int(ids.size)
+
+
 NLCC_ROUTE = "prune.nlcc"
 
 
@@ -389,10 +401,7 @@ def verify_constraint(
         sources = np.flatnonzero(head_cols[:, wi])
         if sources.size == 0:
             continue
-        for off in range(0, sources.size, wave):
-            ids = sources[off : off + wave]
-            pad = wave - ids.size
-            ids_padded = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+        for ids_padded, n_real in wave_batches(sources, wave):
             ids_dev = jnp.asarray(ids_padded, jnp.int32)
             wave_state = PruneState(omega=omega, edge_active=state.edge_active)
             if route == _registry.ROUTE_FUSED:
@@ -415,7 +424,7 @@ def verify_constraint(
             keep = keep.at[wi, jnp.clip(ids_dev, 0, n - 1)].max(survived)
             n_waves += 1
             if stats is not None:
-                stats["nlcc_tokens"] = stats.get("nlcc_tokens", 0) + int(ids.size)
+                stats["nlcc_tokens"] = stats.get("nlcc_tokens", 0) + n_real
                 stats[wave_stat] = stats.get(wave_stat, 0) + 1
     # remove head candidacy from failing sources (Alg. 5 line 8), on device
     for wi, q0 in enumerate(heads):
@@ -450,10 +459,7 @@ def _edge_prune_pass(
     m = dg.m
     live_f = np.zeros((l, m), dtype=bool)
     live_r = np.zeros((l, m), dtype=bool)
-    for off in range(0, sources.size, wave):
-        ids = sources[off: off + wave]
-        pad = wave - ids.size
-        idsp = np.concatenate([ids, np.full(pad, -1, np.int64)]) if pad else ids
+    for idsp, _ in wave_batches(sources, wave):
         _, fl, rl = walk_frontiers_and_edges(
             dg, state, cand, constraint.is_cyclic, jnp.asarray(idsp, jnp.int32))
         live_f |= np.asarray(fl)

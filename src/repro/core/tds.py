@@ -137,6 +137,31 @@ def expand_capacity(sub: ActiveSubgraph, rows: np.ndarray,
     return (sub.offsets[cur + 1] - sub.offsets[cur]).astype(np.int64)
 
 
+def expansion_slots(deg: np.ndarray) -> Tuple[np.ndarray, int]:
+    """Slot layout of one expansion step from STATIC per-row degrees: the
+    int64 inclusive running capacity and the total slot count. Shared by the
+    replicated and row-sharded device joins (core/join.py) — the layout
+    depends on static degrees only, so it is identical on every shard
+    count."""
+    cum = np.cumsum(np.asarray(deg, np.int64))
+    return cum, (int(cum[-1]) if cum.size else 0)
+
+
+def slot_parents(cum: np.ndarray, deg: np.ndarray,
+                 n_slots: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side (parent row, within-frontier arc j) per expansion slot for
+    the layout `expansion_slots` produced. Slots past the real capacity
+    (pow2 padding) land on the last row with j >= its degree, so every
+    filter rejects them."""
+    cum = np.asarray(cum, np.int64)
+    deg = np.asarray(deg, np.int64)
+    t = np.arange(n_slots, dtype=np.int64)
+    parent = np.searchsorted(cum, t, side="right")
+    parent = np.minimum(parent, max(cum.shape[0] - 1, 0))
+    j = t - (cum[parent] - deg[parent])
+    return parent.astype(np.int32), j.astype(np.int32)
+
+
 def tds_walk(
     sub: ActiveSubgraph,
     walk: Sequence[int],

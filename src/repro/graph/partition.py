@@ -72,6 +72,8 @@ class EdgePartition:
 
     def __post_init__(self):
         self._join_plan: Optional["JoinPlan"] = None
+        self._join_plan_dev: Optional[Dict[str, jnp.ndarray]] = None
+        self._row_plan: Optional["RowPlan"] = None
 
     @property
     def total_slots(self) -> int:
@@ -83,6 +85,28 @@ class EdgePartition:
         if self._join_plan is None:
             self._join_plan = build_join_plan(self)
         return self._join_plan
+
+    def join_plan_dev(self) -> Dict[str, jnp.ndarray]:
+        """Device-resident copies of the join plan's static arrays, uploaded
+        ONCE per partition: repeated `enumerate_matches` calls against the
+        same partition reuse the same device buffers instead of re-staging
+        the CSR every call."""
+        if self._join_plan_dev is None:
+            plan = self.join_plan()
+            self._join_plan_dev = {
+                "perm": jnp.asarray(plan.perm),
+                "csr_off": jnp.asarray(plan.csr_off),
+                "arc_dst": jnp.asarray(plan.arc_dst),
+                "deg": jnp.asarray(plan.deg),
+            }
+        return self._join_plan_dev
+
+    def row_plan(self) -> "RowPlan":
+        """The (cached) row-ownership plan of the distributed-rows join —
+        see `build_row_plan`."""
+        if self._row_plan is None:
+            self._row_plan = build_row_plan(self)
+        return self._row_plan
 
     def device_arrays(self) -> Dict[str, jnp.ndarray]:
         return {
@@ -224,6 +248,57 @@ def build_join_plan(part: EdgePartition) -> JoinPlan:
     return JoinPlan(A=A, n_pad=n_pad, perm=perm,
                     csr_off=csr_off.astype(np.int32), arc_dst=arc_dst,
                     deg=deg.astype(np.int32))
+
+
+@dataclasses.dataclass
+class RowPlan:
+    """Row-ownership plan for the distributed-rows join (core/join.py).
+
+    Ownership rule: a partial-embedding row lives on the shard that owns the
+    row's NEXT frontier vertex — owner(v) = v // n_local, the same block rule
+    the edge partition uses — because that shard holds every arc of v in its
+    join-plan CSR, so expansion is purely local once rows are routed. The
+    plan is derived from `join_plan()` (its static per-vertex degrees in the
+    padded global id space), so slot layout and capacity math are identical
+    on every shard count: only row PLACEMENT varies with P, never row
+    content or order-insensitive results.
+
+    `deg` is a host int64 copy of the join plan's static degree table (sink
+    vertex n_pad has degree 0) — the host sizes each step's expansion slots
+    and exchange buckets from it without touching device data.
+    """
+
+    P: int
+    n_local: int
+    n_pad: int
+    deg: np.ndarray  # int64[n_pad + 1]
+
+    def owner_of(self, v: np.ndarray) -> np.ndarray:
+        """Owner shard per global vertex id; the sink id n_pad maps to P
+        (the 'nowhere' bucket pads route around)."""
+        return np.minimum(np.asarray(v, np.int64) // self.n_local, self.P)
+
+    def shard_rows(self, rows: np.ndarray, owner_col: int,
+                   pow2_pad) -> Tuple[np.ndarray, np.ndarray]:
+        """Bucket host rows [K, C] by the owner of column `owner_col` into a
+        padded [P, Rb, C] block (sink rows = n_pad) + per-shard counts.
+        Order within a shard preserves the input order (stable), so the
+        layout is deterministic."""
+        rows = np.asarray(rows, np.int32)
+        owner = self.owner_of(rows[:, owner_col])
+        counts = np.bincount(owner, minlength=self.P)[: self.P]
+        rb = pow2_pad(int(counts.max()) if counts.size else 0)
+        out = np.full((self.P, rb, rows.shape[1]), self.n_pad, np.int32)
+        for p in range(self.P):
+            sel = rows[owner == p]
+            out[p, : sel.shape[0]] = sel
+        return out, counts.astype(np.int64)
+
+
+def build_row_plan(part: EdgePartition) -> RowPlan:
+    plan = part.join_plan()
+    return RowPlan(P=part.P, n_local=part.n_local, n_pad=plan.n_pad,
+                   deg=plan.deg.astype(np.int64))
 
 
 def _twin_index(g: Graph) -> np.ndarray:

@@ -73,6 +73,12 @@ ROUTE_FUSED = "fused"
 # device-resident join over the execution-backend prims (core/join.py)
 ROUTE_HOST = "host"
 ROUTE_DEVICE = "device"
+# row placement of the SHARDED device join (bucket ("sharded", mode)):
+# replicated = every shard holds the full row table, slots psum-combined;
+# rowsharded = rows live on their frontier-vertex owner shard and move via
+# the keyed `exchange_rows` collective — per-shard memory ~1/P (the default)
+ROUTE_REPLICATED = "replicated"
+ROUTE_ROWSHARDED = "rowsharded"
 
 # wildcard bucket: one decision for every shape of a (kernel, backend) pair
 BUCKET_ANY = "*"

@@ -1,0 +1,61 @@
+"""The engine-prims seam is the ONLY collective boundary (acceptance
+criterion of the distributed-rows refactor).
+
+Every cross-shard movement in the core pipeline — candidacy exchange,
+reductions, the keyed row exchange, the overlapped convergence check — must
+go through the `Prims` layer in ``core/engine.py``. No other core module may
+call a raw ``jax.lax`` collective: that is what keeps the local / sim / spmd
+backends bit-interchangeable and the 1/2/4/8-shard parity suites meaningful.
+"""
+import pathlib
+import re
+
+import pytest
+
+CORE = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro" / "core"
+
+# collective primitives that move data across the shard axis
+_COLLECTIVE = re.compile(
+    r"\bjax\.lax\.(all_to_all|psum|psum_scatter|all_gather|ppermute|"
+    r"pshuffle|axis_index|pmean|pmax|pmin)\b")
+
+
+def _strip_comments(text: str) -> str:
+    return "\n".join(line.split("#", 1)[0] for line in text.splitlines())
+
+
+def test_no_raw_collectives_outside_engine_prims():
+    offenders = {}
+    for path in sorted(CORE.glob("*.py")):
+        if path.name == "engine.py":  # the prims seam itself
+            continue
+        hits = _COLLECTIVE.findall(_strip_comments(path.read_text()))
+        if hits:
+            offenders[path.name] = sorted(set(hits))
+    assert not offenders, (
+        f"raw jax.lax collectives outside the core/engine.py prims seam: "
+        f"{offenders} — route them through Prims instead")
+
+
+def test_engine_prims_expose_the_full_seam():
+    """The Prims tuple carries every collective the refactor added — the
+    keyed row exchange and the overlap combinator — on all three backends."""
+    from repro.core import engine
+
+    for prims in (engine.local_prims(), ):
+        for field in ("exchange", "all_reduce_or", "psum", "axis_index",
+                      "exchange_rows", "overlap"):
+            assert callable(getattr(prims, field)), field
+
+
+def test_collective_pattern_matches_known_spellings():
+    """Guard the guard: engine.py itself must still match the regex, so a
+    rename of the collective spellings can't silently blind this test."""
+    text = _strip_comments((CORE / "engine.py").read_text())
+    assert _COLLECTIVE.search(text), (
+        "core/engine.py no longer matches the collective regex; update "
+        "test_collective_discipline.py to track the new spellings")
+
+
+if __name__ == "__main__":
+    pytest.main([__file__, "-v"])

@@ -331,6 +331,10 @@ def test_rollup_schema_roundtrip(tmp_path):
         enumeration={"template": "T4-square-rare", "count_seconds": 0.1,
                      "materialize_seconds": 0.3, "n_embeddings": 12,
                      "automorphisms": 2, "count_matches_materialize": True},
+        distributed_join={"P": 4, "replicated_seconds": 0.02,
+                          "rowsharded_seconds": 0.006, "counts_match": True,
+                          "peak_rows_replicated": 37,
+                          "peak_shard_rows_rowsharded": 21},
         path=str(tmp_path / "BENCH_pipeline.json"),
     )
     payload = json.load(open(path))
@@ -341,6 +345,7 @@ def test_rollup_schema_roundtrip(tmp_path):
     assert payload["suites"]["dispatch_policy"]["ok"] is True
     assert payload["sharded_prune"]["matches_local"] is True
     assert payload["enumeration"]["count_matches_materialize"] is True
+    assert payload["distributed_join"]["counts_match"] is True
     route_key = f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}"
     assert payload["policy"]["routes"][route_key]["choice"] == registry.ROUTE_PACKED
 
@@ -358,6 +363,10 @@ def test_rollup_schema_roundtrip(tmp_path):
     (lambda p: p.update(enumeration={"count_seconds": 0.1}),
      "missing key 'materialize_seconds'"),
     (lambda p: p.update(enumeration=[1]), "enumeration must be a dict"),
+    (lambda p: p.update(distributed_join={"P": 4, "counts_match": True}),
+     "missing key 'replicated_seconds'"),
+    (lambda p: p.update(distributed_join=[1]),
+     "distributed_join must be a dict"),
 ])
 def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
     registry.set_policy(None)

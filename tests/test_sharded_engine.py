@@ -346,6 +346,189 @@ def test_sim_enumeration_streaming_parity():
     np.testing.assert_array_equal(be.embeddings, cat)
 
 
+# ------------------------------------------------- distributed-rows join
+def _hub_graph():
+    """A skew construction: four hub vertices at ids 0..3 (one shard's block
+    at every P in 1/2/4/8) adjacent to every leaf. Any walk through the hub
+    label funnels >80% of the expandable rows onto the hubs' owner shard."""
+    from repro.graph.structs import Graph
+
+    n, hubs = 64, 4
+    pairs = [(h, v) for h in range(hubs) for v in range(hubs, n)]
+    labels = [1] * hubs + [0] * (n - hubs)
+    return Graph.from_undirected_pairs(n, pairs, labels)
+
+
+def test_rowsharded_vs_replicated_flavor_parity():
+    """The two sharded row placements are bit-identical to each other and to
+    the local host join — embeddings, counts x |Aut| — and report their
+    engine flavor under the public 'device' route."""
+    from repro.core import enumerate_matches
+
+    case = _cases()[0]
+    g = _graph()
+    be = _base_enum(case)
+    sharded = prune(g, case[1], partition=4, **case[2])
+    outs = {}
+    for flavor in (registry.ROUTE_ROWSHARDED, registry.ROUTE_REPLICATED):
+        stats = {}
+        se = enumerate_matches(sharded, route=flavor, stats=stats)
+        assert se.route == "device"
+        assert stats["enumerate_route"] == "device"
+        assert stats["enumerate_join_engine"] == flavor
+        np.testing.assert_array_equal(be.embeddings, se.embeddings,
+                                      err_msg=flavor)
+        sc = enumerate_matches(sharded, route=flavor, mode="count")
+        assert sc.n_embeddings == be.n_embeddings, flavor
+        outs[flavor] = se
+    assert outs[registry.ROUTE_ROWSHARDED].n_embeddings > 0
+
+
+def test_rowsharded_flavor_policy_and_rejections():
+    """The dispatch policy's ("sharded", mode) bucket picks the row
+    placement (default rowsharded); flavors are meaningless on the local
+    backend and route='host' stays rejected on sharded results."""
+    from repro.core import enumerate_matches
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    sharded = prune(g, tmpl, partition=2, guarantee_precision=False)
+    stats = {}
+    enumerate_matches(sharded, mode="count", stats=stats)
+    assert stats["enumerate_join_engine"] == registry.ROUTE_ROWSHARDED
+
+    pol = registry.DispatchPolicy()
+    pol.set_route("enumerate.join", jax.default_backend(),
+                  ("sharded", "count"), registry.ROUTE_REPLICATED)
+    registry.set_policy(pol)
+    try:
+        stats = {}
+        se = enumerate_matches(sharded, mode="count", stats=stats)
+    finally:
+        registry.set_policy(None)
+    assert se.route == "device"
+    assert stats["enumerate_join_engine"] == registry.ROUTE_REPLICATED
+
+    local = prune(g, tmpl, guarantee_precision=False)
+    with pytest.raises(ValueError, match="row placement"):
+        enumerate_matches(local, route=registry.ROUTE_ROWSHARDED)
+    with pytest.raises(ValueError, match="device-resident"):
+        enumerate_matches(sharded, route="host")
+
+
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+def test_rowsharded_skewed_ownership_pads_not_drops(P):
+    """Power-law frontier: one shard owns every hub, hence >80% of the
+    expandable rows. The exchange buckets must PAD, never drop — occupancy
+    bounded by the bucket cap — and the result stays bit-identical to the
+    local host join."""
+    from repro.core import enumerate_matches
+
+    g = _hub_graph()
+    tmpl = Template([0, 1, 0], [(0, 1), (1, 2)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    be = enumerate_matches(base, route="host")
+    assert be.n_embeddings > 0
+    sharded = prune(g, tmpl, partition=P, guarantee_precision=False)
+    stats = {}
+    se = _enumerate_no_gather(sharded, route=registry.ROUTE_ROWSHARDED,
+                              stats=stats)
+    np.testing.assert_array_equal(be.embeddings, se.embeddings,
+                                  err_msg=f"skew P={P}")
+    assert stats["rowshard_owner_frac_max"] >= 0.8
+    # pad-not-drop: every (sender, owner) bucket fits under the pow2 cap
+    assert stats["rowshard_bucket_occupancy_max"] <= stats["rowshard_bucket_cap"]
+    sc = enumerate_matches(sharded, route=registry.ROUTE_ROWSHARDED,
+                           mode="count")
+    assert sc.n_embeddings == be.n_embeddings
+
+
+def test_rowsharded_memory_scales_inverse_P():
+    """The tentpole's point: on a balanced frontier the per-shard resident
+    row table shrinks with P — peak shard rows at P=8 is a fraction of the
+    P=1 (== replicated) table, while totals stay bit-equal."""
+    from repro.core import enumerate_matches
+    from repro.graph.generators import erdos_renyi_graph
+
+    g = erdos_renyi_graph(256, 6.0, seed=3, n_labels=2)
+    tmpl = Template([0, 1, 0], [(0, 1), (1, 2)])
+    peaks = {}
+    counts = {}
+    for P in (1, 8):
+        sharded = prune(g, tmpl, partition=P, guarantee_precision=False)
+        stats = {}
+        sc = enumerate_matches(sharded, mode="count",
+                               route=registry.ROUTE_ROWSHARDED, stats=stats)
+        counts[P] = sc.n_embeddings
+        peaks[P] = stats["rowshard_peak_shard_rows"]
+        # every shard's resident block is bounded by pow2(peak shard rows),
+        # never the global row count
+        assert (stats["rowshard_resident_rows_max"]
+                < 2 * max(stats["rowshard_peak_shard_rows"], 1) + 1)
+    assert counts[1] == counts[8] and counts[1] > 0
+    # at least a 2x reduction (ideally ~8x; pow2 padding + imbalance slop)
+    assert peaks[8] * 2 <= peaks[1]
+
+
+def test_join_plan_and_row_plan_cached_on_partition():
+    """Satellite regression: `join_plan()` / `join_plan_dev()` / `row_plan()`
+    build once per partition — repeated enumerations reuse the same plan and
+    the same device buffers instead of re-staging the CSR."""
+    from repro.core import enumerate_matches
+    from repro.graph import partition as part_mod
+
+    g = _graph()
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    part = partition_graph(g, 4)
+    calls = {"n": 0}
+    real = part_mod.build_join_plan
+
+    def counting(p):
+        calls["n"] += 1
+        return real(p)
+
+    part_mod.build_join_plan = counting
+    try:
+        sharded = prune(g, tmpl, partition=part, guarantee_precision=False)
+        enumerate_matches(sharded, mode="count")
+        enumerate_matches(sharded, mode="count")
+    finally:
+        part_mod.build_join_plan = real
+    assert calls["n"] <= 1
+    assert part.join_plan() is part.join_plan()
+    assert part.join_plan_dev() is part.join_plan_dev()
+    assert part.row_plan() is part.row_plan()
+    assert part.row_plan().deg.dtype == np.int64
+
+
+def test_rowsharded_int32_capacity_guard():
+    """Mirrors PR 4's slot-map guard: a per-shard expansion capacity that
+    would overflow int32 slot ids raises a diagnostic NotImplementedError
+    instead of silently wrapping."""
+    import dataclasses as _dc
+    from repro.core import enumerate as enum_mod
+    from repro.core import join as join_mod
+
+    with pytest.raises(NotImplementedError, match="int32"):
+        join_mod._guard_int32(2 ** 31, "unit slots")
+    join_mod._guard_int32(2 ** 31 - 1, "unit slots")  # boundary: fine
+
+    g = _hub_graph()
+    tmpl = Template([0, 1, 0], [(0, 1), (1, 2)])
+    sharded = prune(g, tmpl, partition=2, guarantee_precision=False)
+    eng = enum_mod._make_engine(
+        registry.ROUTE_ROWSHARDED, "sharded", sharded.dg, sharded.state,
+        tmpl, enum_mod.template_walk(tmpl), 2 ** 40, False,
+        sharded.backend, None)
+    # a private copy of the row plan: the partition's cached plan must not
+    # see the poisoned degree table
+    eng.rp = _dc.replace(
+        eng.rp, deg=np.full_like(eng.rp.deg, np.int64(2) ** 27))
+    rows = eng.seed(eng.sources()[:64])
+    with pytest.raises(NotImplementedError, match="int32"):
+        eng.step(rows, 1)
+
+
 # ---------------------------------------------------------- spmd backend
 _needs_devices = pytest.mark.skipif(
     len(jax.devices()) < 8,
@@ -388,6 +571,31 @@ def test_spmd_enumeration_parity_8_devices():
 
 
 @_needs_devices
+def test_spmd_rowsharded_skew_8_devices():
+    """The skewed-ownership case on a real shard_map mesh: exchange buckets
+    pad-not-drop and the distributed-rows join stays bit-identical."""
+    from repro.core import enumerate_matches
+    from repro.launch.mesh import make_shard_mesh
+
+    g = _hub_graph()
+    tmpl = Template([0, 1, 0], [(0, 1), (1, 2)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    be = enumerate_matches(base, route="host")
+    sharded = prune(g, tmpl, mesh=make_shard_mesh(8),
+                    guarantee_precision=False)
+    assert sharded.stats["backend"] == "spmd"
+    stats = {}
+    se = enumerate_matches(sharded, route=registry.ROUTE_ROWSHARDED,
+                           stats=stats)
+    np.testing.assert_array_equal(be.embeddings, se.embeddings)
+    assert stats["rowshard_owner_frac_max"] >= 0.8
+    assert stats["rowshard_bucket_occupancy_max"] <= stats["rowshard_bucket_cap"]
+    sp = enumerate_matches(sharded, route=registry.ROUTE_REPLICATED,
+                           mode="count")
+    assert sp.n_embeddings == be.n_embeddings
+
+
+@_needs_devices
 def test_spmd_partition_coarser_than_mesh_rejected():
     from repro.launch.mesh import make_shard_mesh
 
@@ -423,8 +631,15 @@ SPMD_SCRIPT = textwrap.dedent(
         se = enumerate_matches(sh)  # device-resident join on the mesh
         assert se.route == "device", se.route
         assert np.array_equal(be.embeddings, se.embeddings), name
-        sc = enumerate_matches(sh, mode="count")
+        st = {}
+        sc = enumerate_matches(sh, mode="count", stats=st)
         assert sc.n_embeddings == be.n_embeddings, name
+        # distributed rows are the default flavor; replicated stays bit-equal
+        assert st["enumerate_join_engine"] == "rowsharded", st
+        if sc.n_embeddings:
+            assert st["rowshard_bucket_occupancy_max"] <= st["rowshard_bucket_cap"]
+        sp = enumerate_matches(sh, mode="count", route="replicated")
+        assert sp.n_embeddings == be.n_embeddings, name
     print("SPMD_PRUNE_OK")
     """
 )
