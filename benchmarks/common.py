@@ -139,6 +139,28 @@ def validate_rollup(payload: Dict) -> None:
         need(dj, "counts_match", bool, "distributed_join")
         need(dj, "peak_rows_replicated", int, "distributed_join")
         need(dj, "peak_shard_rows_rowsharded", int, "distributed_join")
+    if "load_balance" in payload:  # additive (PR 7): reshuffle-evenness point
+        lb = payload["load_balance"]
+        if not isinstance(lb, dict):
+            raise ValueError("roll-up load_balance must be a dict")
+        need(lb, "P", int, "load_balance")
+        need(lb, "shards_holding_half_before", int, "load_balance")
+        need(lb, "shards_holding_half_after", int, "load_balance")
+        need(lb, "max_over_mean_before", (int, float), "load_balance")
+        need(lb, "max_over_mean_after", (int, float), "load_balance")
+        need(lb, "reshuffle_evens_load", bool, "load_balance")
+    if "resilience" in payload:  # additive (PR 7): fault-recovery point
+        rs = payload["resilience"]
+        if not isinstance(rs, dict):
+            raise ValueError("roll-up resilience must be a dict")
+        need(rs, "P", int, "resilience")
+        need(rs, "restart_P", int, "resilience")
+        need(rs, "phases_checkpointed", int, "resilience")
+        need(rs, "checkpoint_overhead_seconds", (int, float), "resilience")
+        need(rs, "recovery_seconds", (int, float), "resilience")
+        need(rs, "scratch_seconds", (int, float), "resilience")
+        need(rs, "parity_ok", bool, "resilience")
+        need(rs, "recovered_faster_than_scratch", bool, "resilience")
 
 
 def write_rollup(
@@ -151,6 +173,8 @@ def write_rollup(
     sharded_prune: Optional[Dict] = None,
     enumeration: Optional[Dict] = None,
     distributed_join: Optional[Dict] = None,
+    load_balance: Optional[Dict] = None,
+    resilience: Optional[Dict] = None,
     policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
 ) -> str:
@@ -176,6 +200,16 @@ def write_rollup(
     replicated-vs-distributed-rows placement point from
     benchmarks/distributed_join.py (additive, PR 6; the CI smoke job gates
     counts_match and the per-shard memory reduction)
+    load_balance  {"P": ..., "shards_holding_half_before"/"..._after": ...,
+    "max_over_mean_before"/"..._after": ..., "reshuffle_evens_load": ...} —
+    the Fig. 7 reshuffle-evenness point from benchmarks/load_balance.py
+    (additive, PR 7)
+    resilience  {"P": ..., "restart_P": ..., "phases_checkpointed": ...,
+    "checkpoint_overhead_seconds": ..., "recovery_seconds": ...,
+    "scratch_seconds": ..., "parity_ok": ...,
+    "recovered_faster_than_scratch": ...} — the fault-recovery point from
+    benchmarks/resilience.py (additive, PR 7; the CI smoke job gates
+    parity_ok and recovered_faster_than_scratch)
     policy_fallback  a previously recorded "policy" block to keep when NO
     policy is active in the registry (partial --only runs on untuned
     checkouts must not wipe the committed tuning trajectory)
@@ -205,6 +239,10 @@ def write_rollup(
         payload["enumeration"] = dict(enumeration)
     if distributed_join:
         payload["distributed_join"] = dict(distributed_join)
+    if load_balance:
+        payload["load_balance"] = dict(load_balance)
+    if resilience:
+        payload["resilience"] = dict(resilience)
     validate_rollup(payload)
     out = path or rollup_path()
     with open(out, "w") as f:

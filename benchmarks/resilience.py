@@ -1,0 +1,99 @@
+"""Beyond-paper production posture — fault-tolerant elastic execution.
+
+Measures what the resilience layer (core/resilience.py + the re-enterable
+pipeline driver) costs and buys on the sharded backend:
+
+  - checkpoint overhead: a fault-free sharded prune with phase-boundary
+    checkpointing on vs off (per-phase snapshot seconds and the total),
+  - recovery: shard loss injected at the LAST phase boundary, restored from
+    the latest checkpoint onto a SMALLER shard count (the paper's LB-16/LB-1
+    recover-on-smaller-deployment), vs re-pruning from scratch,
+  - parity: the recovered run must be bit-identical to the fault-free one
+    (omega + endpoint-consistent edge mask) — monotone phases make phase
+    boundaries exact consistency points.
+
+The roll-up point gates on the two host-speed-immune shape facts
+(`parity_ok`, `recovered_faster_than_scratch`); the seconds are trajectory
+data.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.template import Template
+from repro.core.pipeline import prune
+from repro.core import resilience as res
+from benchmarks.common import WDC_LIKE_TEMPLATES, graph_for, save, timer
+
+P = 4
+RESTART_P = 2
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    # T2-bowtie + guarantee_precision: K=3 constraints (CC, CC, complete-walk
+    # TDS) -> 4 phase boundaries, so the last-phase fault below restores a
+    # real mid-pipeline checkpoint instead of re-pruning from scratch
+    labels, edges = WDC_LIKE_TEMPLATES["T2-bowtie"]
+    tmpl = Template(labels, edges)
+    kw = dict(guarantee_precision=True)
+
+    # fault-free sharded reference (also warms every jit cache so the
+    # scratch-vs-recovery comparison below is compile-free on both sides)
+    base = prune(g, tmpl, partition=P, **kw)
+    n_phases = base.stats["n_constraints"] + 1
+    _, scratch_s = timer(lambda: prune(g, tmpl, partition=P, **kw))
+
+    out: Dict = {"graph": {"n": g.n, "m": g.m}, "P": P, "restart_P": RESTART_P,
+                 "solution": base.counts(), "scratch_seconds": scratch_s}
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # checkpointing on, no faults: the overhead side
+        cfg = res.ResilienceConfig(checkpoint_dir=ckpt_dir)
+        ck = prune(g, tmpl, partition=P, resilience=cfg, **kw)
+        rs = ck.stats["resilience"]
+        out["phases_checkpointed"] = rs["checkpoints"]
+        out["checkpoint_seconds_per_phase"] = rs["checkpoint_seconds"]
+        out["checkpoint_overhead_seconds"] = float(
+            sum(rs["checkpoint_seconds"]))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        # shard loss at the last phase: restore the phase-(K-1) checkpoint
+        # onto RESTART_P shards, replay one phase
+        inj = res.FaultInjector([res.FaultSpec(
+            kind=res.FAULT_SHARD_LOSS, phase=n_phases - 1)])
+        cfg = res.ResilienceConfig(
+            checkpoint_dir=ckpt_dir, injector=inj,
+            elastic=res.ElasticConfig(restart_P=RESTART_P))
+        t0 = time.perf_counter()
+        rec = prune(g, tmpl, partition=P, resilience=cfg, **kw)
+        out["faulted_run_seconds"] = time.perf_counter() - t0
+        rrs = rec.stats["resilience"]
+        recovery_s = float(rrs["recovery_seconds"])
+        parity = bool(
+            np.array_equal(base.omega, rec.omega)
+            and np.array_equal(base.edge_mask, rec.edge_mask))
+        out["recovery_seconds"] = recovery_s
+        out["restarts"] = rrs["restarts"]
+        out["parity_ok"] = parity
+
+    out["rollup"] = {
+        "P": P,
+        "restart_P": RESTART_P,
+        "phases_checkpointed": int(out["phases_checkpointed"]),
+        "checkpoint_overhead_seconds": out["checkpoint_overhead_seconds"],
+        "recovery_seconds": recovery_s,
+        "scratch_seconds": scratch_s,
+        "parity_ok": parity,
+        "recovered_faster_than_scratch": bool(recovery_s < scratch_s),
+    }
+    save("resilience", out)
+    return out
+
+
+if __name__ == "__main__":
+    print(run())

@@ -37,6 +37,7 @@ SUITES = [
     ("rmat_distributions", "Table 10: R-MAT skew sweep"),
     ("frontier_edge_prune", "beyond-paper: CC edge-exactness, TDS skipped"),
     ("precision_tradeoff", "Reza'18 §5E: effort vs precision (recall 100%)"),
+    ("resilience", "beyond-paper: phase checkpoints + elastic fault recovery"),
 ]
 
 
@@ -94,7 +95,8 @@ def main(argv=None):
                 carried = {k: prev.get(k)
                            for k in ("graph", "phases", "nlcc_wave",
                                      "sharded_prune", "enumeration",
-                                     "distributed_join", "policy")}
+                                     "distributed_join", "load_balance",
+                                     "resilience", "policy")}
         path = common.write_rollup(
             suites, args.scale,
             graph=dp.get("graph") or carried.get("graph"),
@@ -106,6 +108,10 @@ def main(argv=None):
             distributed_join=(
                 payloads.get("distributed_join", {}).get("rollup")
                 or carried.get("distributed_join")),
+            load_balance=(payloads.get("load_balance", {}).get("rollup")
+                          or carried.get("load_balance")),
+            resilience=(payloads.get("resilience", {}).get("rollup")
+                        or carried.get("resilience")),
             policy_fallback=carried.get("policy"),
         )
         print(f"roll-up -> {path}")

@@ -2,6 +2,8 @@ from repro.checkpoint.ckpt import (
     save_checkpoint,
     restore_checkpoint,
     latest_step,
+    latest_valid_step,
+    checkpoint_valid,
     CheckpointManager,
 )
 
@@ -9,5 +11,7 @@ __all__ = [
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
+    "latest_valid_step",
+    "checkpoint_valid",
     "CheckpointManager",
 ]

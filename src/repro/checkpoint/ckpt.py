@@ -12,7 +12,13 @@ load-balancing mechanism *and* the framework's failure recovery):
     load via the caller's shardings (the paper's LB-16 / LB-1 scenario),
   - retention: keep the last `keep` checkpoints, delete older ones,
   - deterministic resume: the manifest stores data-pipeline cursors so streams
-    skip ahead instead of replaying.
+    skip ahead instead of replaying,
+  - torn-write safe: the manifest is written (and fsynced) LAST inside the
+    tmp dir, so a directory whose manifest parses is complete by
+    construction; `restore_checkpoint(step=None)` / `restore_latest`
+    additionally validate each candidate (manifest vs arrays.npz shapes and
+    dtypes) and SKIP corrupt/partial directories with a warning, falling
+    back to the newest valid one instead of crashing.
 
 Storage is .npz per checkpoint (numpy is the only offline dependency).
 """
@@ -22,6 +28,8 @@ import json
 import os
 import shutil
 import tempfile
+import warnings
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -61,8 +69,11 @@ def save_checkpoint(
     tmp = tempfile.mkdtemp(dir=directory, prefix=f".tmp{step}_")
     try:
         np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        # manifest last + fsynced: its presence certifies the arrays landed
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.exists(final):
             shutil.rmtree(final)
         os.replace(tmp, final)
@@ -81,13 +92,62 @@ def _retain(directory: str, keep: int):
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
 
 
-def latest_step(directory: str) -> Optional[int]:
+def _all_steps(directory: str) -> List[int]:
     if not os.path.isdir(directory):
-        return None
-    steps = sorted(
+        return []
+    return sorted(
         int(d.split("_")[1]) for d in os.listdir(directory) if d.startswith("step_")
     )
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = _all_steps(directory)
     return steps[-1] if steps else None
+
+
+# every failure mode a torn/truncated checkpoint can surface as: unparseable
+# JSON, a truncated or missing npz (BadZipFile/OSError/EOFError), manifest
+# keys absent, or per-leaf shape/dtype records contradicting the arrays
+_CORRUPT_ERRORS = (OSError, ValueError, KeyError, EOFError,
+                   json.JSONDecodeError, zipfile.BadZipFile)
+
+
+def checkpoint_valid(path: str) -> bool:
+    """Deep-validate one checkpoint directory: the manifest parses AND every
+    array in arrays.npz is readable with the recorded shape/dtype. Reading
+    each member forces zlib to walk the compressed payload, so a truncated
+    file fails here rather than mid-restore."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        keys = manifest["keys"]
+        shapes = manifest["shapes"]
+        dtypes = manifest["dtypes"]
+        with np.load(os.path.join(path, "arrays.npz"),
+                     allow_pickle=False) as data:
+            for i in range(len(keys)):
+                arr = data[f"a{i}"]
+                if list(arr.shape) != list(shapes[i]):
+                    return False
+                if str(arr.dtype) != dtypes[i]:
+                    return False
+        return True
+    except _CORRUPT_ERRORS:
+        return False
+
+
+def latest_valid_step(directory: str) -> Optional[int]:
+    """Newest step whose checkpoint passes deep validation; corrupt/partial
+    directories are skipped with a warning (a torn write must cost one
+    checkpoint of progress, never the run)."""
+    for step in reversed(_all_steps(directory)):
+        path = os.path.join(directory, f"step_{step:012d}")
+        if checkpoint_valid(path):
+            return step
+        warnings.warn(
+            f"skipping corrupt/partial checkpoint {path} (failed "
+            "manifest/array validation)", RuntimeWarning, stacklevel=2)
+    return None
 
 
 def restore_checkpoint(
@@ -102,11 +162,16 @@ def restore_checkpoint(
     pjit'd step sees it — this is where elastic re-sharding onto a different
     device count / mesh shape happens. Restored global shapes are validated
     against `like_tree` so a config/topology mismatch fails here with a
-    named leaf instead of deep inside pjit."""
+    named leaf instead of deep inside pjit.
+
+    With step=None the newest VALID checkpoint is used — corrupt or partial
+    directories (torn writes) are skipped with a warning. An explicit step
+    is restored as-is and raises on corruption."""
     if step is None:
-        step = latest_step(directory)
+        step = latest_valid_step(directory)
         if step is None:
-            raise FileNotFoundError(f"no checkpoints under {directory}")
+            raise FileNotFoundError(
+                f"no valid checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:012d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)

@@ -16,6 +16,11 @@ from repro.core.enumerate import (
     template_walk,
 )
 from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
+from repro.core.resilience import (
+    ResilienceConfig, ElasticConfig, RetryPolicy, FaultInjector, FaultSpec,
+    InjectedFault, ShardLost, CollectiveTimeout, TransientKernelFailure,
+    ResourceExhausted, PhaseFailed, ResilienceExhausted,
+)
 
 __all__ = [
     "Template",
@@ -41,4 +46,16 @@ __all__ = [
     "template_walk",
     "enumerate_matches_bruteforce",
     "solution_subgraph_oracle",
+    "ResilienceConfig",
+    "ElasticConfig",
+    "RetryPolicy",
+    "FaultInjector",
+    "FaultSpec",
+    "InjectedFault",
+    "ShardLost",
+    "CollectiveTimeout",
+    "TransientKernelFailure",
+    "ResourceExhausted",
+    "PhaseFailed",
+    "ResilienceExhausted",
 ]

@@ -442,12 +442,14 @@ class LocalBackend:
         tds_max_rows: int = 2_000_000,
         work_aggregation: bool = True,
         guarantee_precision: bool = True,
+        injector=None,
     ):
         self.dg = dg
         self.template = template
         self.tdev = TemplateDev(template)
         self.wave = wave
         self.blocked = blocked
+        self.injector = injector
         self.force_pallas = force_pallas
         self.edge_elimination = edge_elimination
         self.collect_stats = collect_stats
@@ -465,6 +467,18 @@ class LocalBackend:
 
     def final_state(self) -> PruneState:
         return self.state
+
+    def snapshot(self):
+        """In-memory device snapshot for the degradation ladder's retry rung
+        (jnp arrays are immutable — holding the references is enough)."""
+        return self.state
+
+    def restore_snapshot(self, snap) -> None:
+        self.state = snap
+
+    def _fire(self, site: str, **ctx) -> None:
+        if self.injector is not None:
+            self.injector.event(site, **ctx)
 
     # -- reporting
     def record_routes(self, stats: Dict) -> None:
@@ -516,6 +530,7 @@ class LocalBackend:
     def lcc(self, stats: Dict) -> None:
         from repro.core.lcc import lcc_fixpoint, lcc_fixpoint_packed, lcc_iteration
 
+        self._fire("lcc")
         dg, tdev, state = self.dg, self.tdev, self.state
         if not self.edge_elimination:
             self.state = self._lcc_no_edge_elim(stats)
@@ -567,6 +582,7 @@ class LocalBackend:
     def nlcc(self, c: NonLocalConstraint, cstats: Dict):
         from repro.core import nlcc as nlcc_mod
 
+        self._fire("nlcc")
         before = self.state
         self.state = nlcc_mod.verify_constraint(
             self.dg, before, c, self.template.labels, wave=self.wave,
@@ -579,6 +595,7 @@ class LocalBackend:
     def tds(self, c: NonLocalConstraint, cstats: Dict):
         from repro.core import tds as tds_mod
 
+        self._fire("tds")
         before = self.state
         self.state = tds_mod.verify_tds_constraint(
             self.dg, before, c, chunk=self.tds_chunk,
@@ -621,6 +638,7 @@ class _ShardedBackend:
         guarantee_precision: bool = True,
         edge_elimination: bool = True,
         arc_order: Optional[np.ndarray] = None,
+        injector=None,
     ):
         if not edge_elimination:
             raise ValueError(
@@ -664,6 +682,33 @@ class _ShardedBackend:
         self._nlcc_routes_taken: set = set()
         self.omega_all: Optional[jnp.ndarray] = None
         self.ea_all: Optional[jnp.ndarray] = None
+        self.injector = injector
+
+    # -- resilience seam ----------------------------------------------------
+    def _fire(self, site: str, **ctx) -> None:
+        """Host-seam fault-injection point: the sharded programs are pure
+        jitted collectives, so simulated failures fire between device
+        dispatches — exactly where a real rank loss would surface."""
+        if self.injector is not None:
+            self.injector.event(site, **ctx)
+
+    def _prims(self) -> Prims:
+        """The collective bundle, wrapped for trace-time accounting (and
+        prim-seam injection) when a fault injector is attached."""
+        p = axis_prims(SHARD_AXIS)
+        if self.injector is not None:
+            from repro.core import resilience as _res
+
+            p = _res.instrument_prims(p, self.injector)
+        return p
+
+    def snapshot(self):
+        """Phase-entry device snapshot for in-place retry (immutable jnp
+        arrays: two references, no copy)."""
+        return (self.omega_all, self.ea_all)
+
+    def restore_snapshot(self, snap) -> None:
+        self.omega_all, self.ea_all = snap
 
     # -- wrapper hook -------------------------------------------------------
     def _make(self, program: Callable, n_sharded: int) -> Callable:
@@ -739,6 +784,20 @@ class _ShardedBackend:
             jnp.sum(jax.lax.population_count(om).astype(jnp.int32), dtype=jnp.int32),
         ])
 
+    def shard_counts_dev(self) -> jnp.ndarray:
+        """int32[P, 2] per-shard [active vertices, active arcs], computed
+        SHARD-LOCALLY: vertices from each shard's omega block, arcs from each
+        shard's send buckets (every arc lives at its src shard; padding slots
+        are never active). No exchange, no full gather — the phase-boundary
+        imbalance trigger reads this with one small transfer. Post-LCC an
+        active arc already implies both endpoints active and compatible, so
+        these equal the host oracle's endpoint-masked counts
+        (loadbalance.imbalance_stats) at every phase boundary."""
+        om = self.omega_all[:, :self.n_local]
+        v = jnp.sum(jnp.any(om != 0, axis=-1), axis=-1, dtype=jnp.int32)
+        e = jnp.sum(self.ea_all, axis=(1, 2), dtype=jnp.int32)
+        return jnp.stack([v, e], axis=-1)
+
     def counts_host(self) -> Dict[str, int]:
         c = np.asarray(self.counts_dev())
         return {"active_vertices": int(c[0]), "active_edges": int(c[1]),
@@ -765,8 +824,9 @@ class _ShardedBackend:
 
     # -- LCC ----------------------------------------------------------------
     def lcc(self, stats: Dict) -> None:
+        self._fire("lcc")
         tm, n_local = self.tm, self.n_local
-        prims = axis_prims(SHARD_AXIS)
+        prims = self._prims()
 
         def program(sa_dict, omega, ea):
             sa = ShardArrays(**sa_dict)
@@ -810,6 +870,7 @@ class _ShardedBackend:
         from repro.kernels import registry as _registry
         from repro.core import nlcc as nlcc_mod
 
+        self._fire("nlcc")
         # captured BEFORE the edge-prune bridge: its edge eliminations must
         # count toward the change flag that triggers the LCC re-run
         omega_before, ea_before = self.omega_all, self.ea_all
@@ -857,6 +918,7 @@ class _ShardedBackend:
             # survivor decision; flushed at the walk boundary.
             pending = None
             for idsp, n_real in nlcc_mod.wave_batches(sources, self.wave):
+                self._fire("wave", wave=n_waves)
                 ids_dev = jnp.asarray(idsp, jnp.int32)
                 if route == _registry.ROUTE_FUSED and pending is not None:
                     keep_cols[wi], f = self._wave_overlapped(
@@ -901,7 +963,7 @@ class _ShardedBackend:
         """Per-shard hop phase of one wave: seed + L hops, returning the
         hop-L packed frontier WITHOUT the survivor decision (that belongs to
         the pipelined finish stage)."""
-        n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
+        n_local, prims = self.n_local, self._prims()
 
         def program(sa_dict, ea, cand_stack, source_ids):
             sa = ShardArrays(**sa_dict)
@@ -920,7 +982,7 @@ class _ShardedBackend:
     def _finish_program(self, packed, is_cyclic):
         """Survivor decision + keep-column scatter for one completed wave
         frontier (the wave's only psum)."""
-        n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
+        n_local, prims = self.n_local, self._prims()
 
         def finish(f, keep, source_ids):
             p = prims.axis_index()
@@ -941,7 +1003,7 @@ class _ShardedBackend:
         (packed words or boolean planes)."""
         from repro.kernels import registry as _registry
 
-        n_local, prims = self.n_local, axis_prims(SHARD_AXIS)
+        n_local, prims = self.n_local, self._prims()
         if route == _registry.ROUTE_FUSED:
             fn = self._fn(("wave_front_fused", L),
                           self._frontier_program(L), n_sharded=3)
@@ -1010,6 +1072,7 @@ class _ShardedBackend:
     def tds(self, c: NonLocalConstraint, cstats: Dict):
         from repro.core import tds as tds_mod
 
+        self._fire("tds")
         state = self.gather_state()
         new = tds_mod.verify_tds_constraint(
             self.dg, state, c, chunk=self.tds_chunk,

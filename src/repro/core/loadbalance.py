@@ -44,6 +44,33 @@ def _gini(x: np.ndarray) -> float:
     return float((n + 1 - 2 * (cum / cum[-1]).sum()) / n)
 
 
+def imbalance_stats_from_counts(vertices_per_shard: np.ndarray,
+                                edges_per_shard: np.ndarray) -> BalanceStats:
+    """BalanceStats from per-shard active counts alone — the device path.
+
+    The sharded backends compute these counts shard-locally on device
+    (`backend.shard_counts_dev()`: a [P, 2] readback, no full state gather),
+    so the phase-boundary rebalance trigger costs one small transfer. After
+    an LCC fixpoint an active edge implies both endpoints are active and
+    compatible, so the device per-shard edge counts equal the host oracle's
+    endpoint-masked counts at every phase boundary — `imbalance_stats`
+    remains the oracle and the parity is pinned in tests."""
+    e_shard = np.asarray(edges_per_shard, np.int64)
+    v_shard = np.asarray(vertices_per_shard, np.int64)
+    P = int(e_shard.size)
+    order = np.sort(e_shard)[::-1]
+    cum = np.cumsum(order)
+    half = int(np.searchsorted(cum, cum[-1] * 0.5) + 1) if cum.size and cum[-1] > 0 else 0
+    return BalanceStats(
+        P=P,
+        edges_per_shard=e_shard,
+        vertices_per_shard=v_shard,
+        max_over_mean_edges=float(e_shard.max() / max(e_shard.mean(), 1e-9)),
+        gini_edges=_gini(e_shard),
+        shards_holding_half=half,
+    )
+
+
 def imbalance_stats(g: Graph, state: Optional[PruneState], P: int,
                     dg: Optional[DeviceGraph] = None) -> BalanceStats:
     n_local = (g.n + P - 1) // P
@@ -61,17 +88,7 @@ def imbalance_stats(g: Graph, state: Optional[PruneState], P: int,
         verts = np.arange(g.n)
     e_shard = np.bincount(src // n_local, minlength=P)
     v_shard = np.bincount(verts // n_local, minlength=P)
-    order = np.sort(e_shard)[::-1]
-    cum = np.cumsum(order)
-    half = int(np.searchsorted(cum, cum[-1] * 0.5) + 1) if cum.size and cum[-1] > 0 else 0
-    return BalanceStats(
-        P=P,
-        edges_per_shard=e_shard,
-        vertices_per_shard=v_shard,
-        max_over_mean_edges=float(e_shard.max() / max(e_shard.mean(), 1e-9)),
-        gini_edges=_gini(e_shard),
-        shards_holding_half=half,
-    )
+    return imbalance_stats_from_counts(v_shard, e_shard)
 
 
 def compact_active_graph(
@@ -124,3 +141,93 @@ def compact_and_repartition(
         "imbalance_before": before,
         "imbalance_after": after,
     }
+
+
+# --------------------------------------------------------------- elastic map
+@dataclasses.dataclass
+class ElasticRemap:
+    """Coordinate map from a compact-and-reshuffled graph back to the
+    ORIGINAL graph, so a run that restarted elastically still reports (and
+    checkpoints) state in original ids — the property that makes recovery
+    bit-verifiable against a fault-free run.
+
+    old_of_new[v]  original vertex id of current vertex v
+    arc_pos[i]     current dst-sorted arc index of original dst-sorted arc i,
+                   or -1 if the arc was inactive at the handoff boundary
+                   (monotonicity: it stays inactive in the original
+                   coordinates forever after)
+    """
+
+    old_of_new: np.ndarray  # int64[n_new]
+    arc_pos: np.ndarray  # int64[m_orig]
+    n_orig: int
+    m_orig: int
+
+
+def remap_state_to_original(state: PruneState, remap: ElasticRemap,
+                            n0: int) -> PruneState:
+    """Express a current-coordinate PruneState in original coordinates
+    (numpy arrays). Vertices/arcs dropped at the handoff boundary are
+    inactive by monotonicity."""
+    omega_cur = np.asarray(state.omega, bool)
+    ea_cur = np.asarray(state.edge_active, bool)
+    omega = np.zeros((remap.n_orig, n0), bool)
+    omega[remap.old_of_new] = omega_cur
+    ea = np.zeros(remap.m_orig, bool)
+    kept = remap.arc_pos >= 0
+    ea[kept] = ea_cur[remap.arc_pos[kept]]
+    return PruneState(omega=omega, edge_active=ea)
+
+
+def elastic_handoff(
+    g: Graph, dg: DeviceGraph, state: PruneState, P: int, seed: int = 0
+) -> Optional[Tuple[Graph, EdgePartition, PruneState, ElasticRemap]]:
+    """The elastic-restart handoff: compact the active subgraph of an
+    ORIGINAL-coordinate phase snapshot, reshuffle for balance, partition
+    onto P shards, and return the state + the map back.
+
+    Continuing the pipeline on the compacted active subgraph is exact: an
+    inactive vertex/arc contributes nothing to any LCC sweep, NLCC wave, or
+    TDS join (its omega/edge bits are already zero and sweeps are monotone),
+    so the remaining phases land on the restriction of the fault-free
+    fixpoint — `remap_state_to_original` then reproduces it bit-for-bit.
+
+    Returns None when the active subgraph is degenerate (no active vertices
+    or no active arcs) — callers fall back to a plain repartition of the
+    original graph, which is always correct."""
+    omega = np.asarray(state.omega, bool)
+    ea = np.asarray(state.edge_active, bool)
+    vact = omega.any(axis=1)
+    src, dst = np.asarray(dg.src), np.asarray(dg.dst)
+    keep = ea & vact[src] & vact[dst]
+    old_ids = np.flatnonzero(vact)
+    if old_ids.size == 0 or not keep.any():
+        return None
+    new_of_old = np.full(g.n, -1, np.int64)
+    new_of_old[old_ids] = np.arange(old_ids.size)
+    sub = Graph(
+        n=old_ids.size,
+        src=new_of_old[src[keep]],
+        dst=new_of_old[dst[keep]],
+        labels=g.labels[old_ids],
+    )
+    shuffled, perm = balanced_shuffle(sub, seed)
+    old_of_new = old_ids[perm]
+    part = partition_graph(shuffled, P)
+    # arc i of the original dst-sorted order survives as the j-th arc of the
+    # compacted host graph (the shuffle re-ids vertices but keeps arc order);
+    # the new DeviceGraph dst-sorts those arcs, so the current position of
+    # host arc j is the inverse of that sort
+    kept_idx = np.flatnonzero(keep)
+    order2 = DeviceGraph.dst_sort_order(shuffled)
+    inv_order2 = np.empty_like(order2)
+    inv_order2[order2] = np.arange(order2.size)
+    arc_pos = np.full(ea.size, -1, np.int64)
+    arc_pos[kept_idx] = inv_order2
+    state_new = PruneState(
+        omega=omega[old_of_new],
+        edge_active=np.ones(shuffled.m, bool),
+    )
+    remap = ElasticRemap(old_of_new=old_of_new.astype(np.int64),
+                         arc_pos=arc_pos, n_orig=g.n, m_orig=int(ea.size))
+    return shuffled, part, state_new, remap

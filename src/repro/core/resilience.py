@@ -1,0 +1,389 @@
+"""Fault-tolerant elastic execution (paper §4/§5.3 production posture).
+
+The pruning pipeline is a sequence of *monotone* phases (LCC fixpoints and
+NLCC/TDS constraint sweeps: omega/edge bits only ever clear), so every phase
+boundary is a consistency point — a snapshot taken there, replayed through the
+remaining phases, lands on the bit-identical fixpoint a fault-free run
+reaches. This module supplies the three pieces `pipeline.prune` threads
+through the execution-backend seam:
+
+  FaultInjector      a deterministic, seedable harness that raises simulated
+                     failures (shard loss, collective timeout, transient
+                     kernel failure, TdsOverflow-style resource exhaustion)
+                     at chosen phase / wave indices. Backends call
+                     `injector.event(site, ...)` at their host dispatch seams
+                     (constraint entry, each NLCC wave, the TDS bridge) and
+                     `registry.dispatch` forwards through the dispatch hook;
+                     `instrument_prims` additionally wraps the 6-prim
+                     collective layer for trace-time accounting and
+                     prim-seam injection.
+  run_phase_with_ladder
+                     the degradation ladder around one phase:
+                     retry (from an in-memory device snapshot, with backoff)
+                     -> ref kernels (registry.mode_override)
+                     -> chunk back-off (halve the TDS chunk)
+                     -> checkpoint-and-raise (PhaseFailed).
+                     Shard loss is never absorbed here — it escapes to the
+                     pipeline's elastic-restart path.
+  ResilienceConfig   checkpoint cadence + retry policy + elastic restart
+                     (restore the last phase snapshot onto a different —
+                     typically smaller — shard count, or trigger the same
+                     compact-and-reshuffle from device-side imbalance stats
+                     at a phase boundary even without a fault).
+
+Faults are plain Python exceptions raised from HOST code between device
+dispatches — the sharded programs themselves are pure jitted collectives, so
+the failure surface the paper describes (a rank dying between bulk steps)
+maps exactly onto the phase/wave dispatch loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import Counter
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.core.tds import TdsOverflow
+
+
+# ---------------------------------------------------------------- fault kinds
+FAULT_SHARD_LOSS = "shard_loss"
+FAULT_COLLECTIVE_TIMEOUT = "collective_timeout"
+FAULT_TRANSIENT_KERNEL = "transient_kernel"
+FAULT_RESOURCE_EXHAUSTED = "resource_exhausted"
+FAULT_KINDS = (FAULT_SHARD_LOSS, FAULT_COLLECTIVE_TIMEOUT,
+               FAULT_TRANSIENT_KERNEL, FAULT_RESOURCE_EXHAUSTED)
+
+
+class InjectedFault(RuntimeError):
+    """Base of every simulated failure the harness raises."""
+
+    kind = "injected"
+
+    def __init__(self, site: str, phase: Optional[int], wave: Optional[int]):
+        super().__init__(
+            f"injected {self.kind} at site={site!r} phase={phase} wave={wave}")
+        self.site = site
+        self.phase = phase
+        self.wave = wave
+
+
+class ShardLost(InjectedFault):
+    """A shard's device state is gone — unrecoverable in place; the pipeline
+    must restore the last phase checkpoint (possibly onto fewer shards)."""
+
+    kind = FAULT_SHARD_LOSS
+
+
+class CollectiveTimeout(InjectedFault):
+    """A collective failed transiently (network hiccup): retryable in place
+    from the phase-entry device snapshot."""
+
+    kind = FAULT_COLLECTIVE_TIMEOUT
+
+
+class TransientKernelFailure(InjectedFault):
+    """A kernel produced an error (compile flake, numerics trap): retryable,
+    then degradable to the reference oracle."""
+
+    kind = FAULT_TRANSIENT_KERNEL
+
+
+class ResourceExhausted(InjectedFault):
+    """TdsOverflow-style resource exhaustion: handled by chunk back-off."""
+
+    kind = FAULT_RESOURCE_EXHAUSTED
+
+
+_EXC_OF_KIND = {
+    FAULT_SHARD_LOSS: ShardLost,
+    FAULT_COLLECTIVE_TIMEOUT: CollectiveTimeout,
+    FAULT_TRANSIENT_KERNEL: TransientKernelFailure,
+    FAULT_RESOURCE_EXHAUSTED: ResourceExhausted,
+}
+
+
+class PhaseFailed(RuntimeError):
+    """The degradation ladder ran out of rungs for one phase. The pipeline
+    treats this like shard loss: checkpoint-restore (elastic) or give up."""
+
+
+class ResilienceExhausted(RuntimeError):
+    """No recovery path left: no checkpointing configured, or the restart
+    budget is spent. Carries the original failure as __cause__."""
+
+
+# ---------------------------------------------------------------- fault specs
+# Ladder rungs in escalation order. A spec's `cleared_by` names the rung that
+# makes the fault stop firing — e.g. cleared_by="retry" simulates a hiccup
+# that a simple re-run fixes, cleared_by="ref" a kernel bug the reference
+# oracle sidesteps. None = the fault fires whenever it matches (a hard fault).
+RUNG_FIRST = "first"
+RUNG_RETRY = "retry"
+RUNG_REF = "ref"
+RUNG_CHUNK = "chunk"
+RUNGS = (RUNG_FIRST, RUNG_RETRY, RUNG_REF, RUNG_CHUNK)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault: fire `times` times (<=0 = every match) at
+    events matching (site, phase, wave), skipping the first `after` matches.
+
+    Sites are the host dispatch seams: "lcc", "nlcc", "wave" (per NLCC wave,
+    with a 0-based `wave` index within the constraint), "tds", "dispatch"
+    (any registry.dispatch call; `kernel` narrows to one kernel name), and
+    "prim:<name>" (trace-time, via `instrument_prims`). site=None matches
+    any driver-seam event."""
+
+    kind: str
+    phase: Optional[int] = None
+    site: Optional[str] = None
+    wave: Optional[int] = None
+    kernel: Optional[str] = None
+    after: int = 0
+    times: int = 1
+    cleared_by: Optional[str] = None
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}; expected one of {FAULT_KINDS}")
+        if self.cleared_by is not None and self.cleared_by not in RUNGS[1:]:
+            raise ValueError(
+                f"cleared_by={self.cleared_by!r} is not a ladder rung "
+                f"{RUNGS[1:]}")
+
+
+@dataclasses.dataclass
+class _Armed:
+    spec: FaultSpec
+    seen: int = 0  # matching events observed (drives `after`)
+    fired: int = 0  # times actually raised
+
+
+class FaultInjector:
+    """Deterministic fault plan evaluated at the host dispatch seams.
+
+    The pipeline announces phase starts (`begin_phase`) and the current
+    ladder rung (`set_rung`); backends and the registry hook report events
+    (`event`). A spec whose filters match raises the corresponding
+    InjectedFault. All state is explicit — replaying the same prune with the
+    same injector plan fires the same faults at the same events."""
+
+    def __init__(self, specs: Sequence[FaultSpec] = ()):
+        self.armed: List[_Armed] = [_Armed(s) for s in specs]
+        self.phase: Optional[int] = None
+        self.rung: str = RUNG_FIRST
+        self.fired: List[Dict] = []  # audit log of raised faults
+        self.events: Counter = Counter()  # every event seen, by site
+        self.prim_trace: Counter = Counter()  # trace-time prim usage
+
+    # -- plan construction
+    @staticmethod
+    def random(seed: int, n_phases: int, *, n_faults: int = 1,
+               kinds: Sequence[str] = (FAULT_SHARD_LOSS,),
+               sites: Sequence[str] = ("lcc", "nlcc", "wave", "tds")
+               ) -> "FaultInjector":
+        """A seeded random fault plan (deterministic: same seed, same plan)."""
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        specs = []
+        for _ in range(n_faults):
+            site = sites[int(rng.integers(len(sites)))]
+            specs.append(FaultSpec(
+                kind=kinds[int(rng.integers(len(kinds)))],
+                phase=int(rng.integers(n_phases)),
+                site=site,
+                wave=int(rng.integers(2)) if site == "wave" else None,
+            ))
+        return FaultInjector(specs)
+
+    # -- pipeline-driven context
+    def begin_phase(self, phase: int) -> None:
+        self.phase = phase
+
+    def set_rung(self, rung: str) -> None:
+        self.rung = rung
+
+    # -- event seams
+    def event(self, site: str, *, wave: Optional[int] = None,
+              kernel: Optional[str] = None) -> None:
+        """Report one host-seam event; raises if an armed spec matches."""
+        self.events[site] += 1
+        for a in self.armed:
+            s = a.spec
+            if s.site is not None and s.site != site:
+                continue
+            if s.phase is not None and s.phase != self.phase:
+                continue
+            if s.wave is not None and s.wave != wave:
+                continue
+            if s.kernel is not None and s.kernel != kernel:
+                continue
+            a.seen += 1
+            if a.seen <= s.after:
+                continue
+            if s.times > 0 and a.fired >= s.times:
+                continue
+            if s.cleared_by is not None and (
+                    RUNGS.index(self.rung) >= RUNGS.index(s.cleared_by)):
+                continue  # the ladder escalated past this fault's cause
+            a.fired += 1
+            self.fired.append({"kind": s.kind, "site": site,
+                               "phase": self.phase, "wave": wave,
+                               "kernel": kernel, "rung": self.rung})
+            raise _EXC_OF_KIND[s.kind](site, self.phase, wave)
+
+    def on_dispatch(self, name: str, mode: str) -> None:
+        """The registry.dispatch hook: every kernel dispatch is an event."""
+        self.event("dispatch", kernel=name)
+
+    def trace_prim(self, name: str) -> None:
+        """Trace-time prim accounting + prim-seam injection (fires when a
+        program USING the prim is first traced — deterministic per program
+        cache, not per execution)."""
+        self.prim_trace[name] += 1
+        self.event(f"prim:{name}")
+
+
+def instrument_prims(prims, injector: FaultInjector):
+    """Wrap every collective of a `Prims` bundle so the injector sees each
+    trace-time use. Returns the same NamedTuple type."""
+
+    def wrap(name, fn):
+        def wrapped(*args, **kwargs):
+            injector.trace_prim(name)
+            return fn(*args, **kwargs)
+
+        return wrapped
+
+    return type(prims)(*(wrap(f, getattr(prims, f)) for f in prims._fields))
+
+
+# ------------------------------------------------------------- configuration
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounds of the degradation ladder."""
+
+    max_retries: int = 2
+    backoff_s: float = 0.0  # sleep before retry r is backoff_s * factor**(r-1)
+    backoff_factor: float = 2.0
+    chunk_backoff_factor: int = 4  # TDS chunk divisor per back-off step
+    max_chunk_backoffs: int = 2
+
+
+@dataclasses.dataclass
+class ElasticConfig:
+    """Elastic restart / rebalance targets.
+
+    restart_P          shard count to restore onto after a fatal fault
+                       (None = keep the current count). The paper's
+                       recover-onto-smaller-deployment (LB-16/LB-1).
+    imbalance_trigger  max-over-mean active-edge threshold checked from
+                       device-side shard counts at every phase boundary;
+                       exceeding it triggers compact-and-reshuffle with NO
+                       fault (None = off).
+    rebalance_P        shard count after a triggered rebalance (None = keep).
+    seed               the balanced_shuffle seed (deterministic reshuffles).
+    """
+
+    restart_P: Optional[int] = None
+    imbalance_trigger: Optional[float] = None
+    rebalance_P: Optional[int] = None
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class ResilienceConfig:
+    """Everything `pipeline.prune(..., resilience=...)` needs."""
+
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1  # phases between checkpoints
+    keep: int = 3  # checkpoint retention
+    injector: Optional[FaultInjector] = None
+    retry: RetryPolicy = dataclasses.field(default_factory=RetryPolicy)
+    elastic: Optional[ElasticConfig] = None
+    max_restarts: int = 4
+
+
+# --------------------------------------------------------- degradation ladder
+def run_phase_with_ladder(
+    run: Callable[[], None],
+    *,
+    snapshot: Callable[[], object],
+    restore: Callable[[object], None],
+    retry: RetryPolicy,
+    injector: Optional[FaultInjector] = None,
+    on_chunk_backoff: Optional[Callable[[int], None]] = None,
+    ladder_log: Optional[List[Tuple[str, str]]] = None,
+    sleep: Callable[[float], None] = time.sleep,
+) -> None:
+    """Execute one phase under the degradation ladder.
+
+    retry      transient collective/kernel faults re-run the phase from the
+               phase-entry device snapshot, with bounded backoff;
+    ref        exhausted retries force the reference-oracle kernel mode
+               (registry.mode_override) for one more attempt;
+    chunk      resource exhaustion (TdsOverflow or injected) restores the
+               snapshot and shrinks the TDS chunk via `on_chunk_backoff`;
+    raise      anything still failing surfaces as PhaseFailed — the caller
+               checkpoints state up to the previous boundary and either
+               elastically restarts or gives up.
+
+    ShardLost is never absorbed: lost device state cannot be retried in
+    place, so it propagates to the pipeline's restore path directly."""
+    from repro.kernels import registry
+
+    set_rung = injector.set_rung if injector is not None else (lambda r: None)
+    snap = snapshot()
+    retries = 0
+    chunk_backoffs = 0
+    tried_ref = False
+    rung = RUNG_FIRST
+    try:
+        while True:
+            set_rung(rung)
+            try:
+                if rung == RUNG_REF:
+                    with registry.mode_override(registry.MODE_REF):
+                        run()
+                else:
+                    run()
+                return
+            except ShardLost:
+                raise
+            except (TdsOverflow, ResourceExhausted) as e:
+                if chunk_backoffs >= retry.max_chunk_backoffs:
+                    raise PhaseFailed(
+                        f"chunk back-off exhausted after {chunk_backoffs} "
+                        f"steps: {e!r}") from e
+                chunk_backoffs += 1
+                if ladder_log is not None:
+                    ladder_log.append((RUNG_CHUNK, repr(e)))
+                restore(snap)
+                if on_chunk_backoff is not None:
+                    on_chunk_backoff(retry.chunk_backoff_factor)
+                rung = RUNG_CHUNK
+            except (CollectiveTimeout, TransientKernelFailure) as e:
+                if retries < retry.max_retries:
+                    retries += 1
+                    if ladder_log is not None:
+                        ladder_log.append((RUNG_RETRY, repr(e)))
+                    restore(snap)
+                    if retry.backoff_s > 0:
+                        sleep(retry.backoff_s
+                              * retry.backoff_factor ** (retries - 1))
+                    rung = RUNG_RETRY
+                elif not tried_ref:
+                    tried_ref = True
+                    if ladder_log is not None:
+                        ladder_log.append((RUNG_REF, repr(e)))
+                    restore(snap)
+                    rung = RUNG_REF
+                else:
+                    raise PhaseFailed(
+                        f"retries and ref fallback exhausted: {e!r}") from e
+    finally:
+        set_rung(RUNG_FIRST)

@@ -79,6 +79,13 @@ class EdgePartition:
     def total_slots(self) -> int:
         return self.P * self.B
 
+    def meta(self) -> Dict[str, int]:
+        """JSON-serializable partition facts (shard count + block geometry) —
+        recorded in checkpoint manifests so an elastic restore knows what
+        deployment the state was saved under."""
+        return {"P": int(self.P), "n": int(self.n),
+                "n_local": int(self.n_local), "B": int(self.B)}
+
     def join_plan(self) -> "JoinPlan":
         """The (cached) shard-local arc plan the device-resident enumeration
         join expands over — see `build_join_plan`."""

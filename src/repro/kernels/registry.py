@@ -47,6 +47,7 @@ kernels/bitset_wave.py). `resolve_route` serves these to the hot loops.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -330,6 +331,51 @@ def get_policy() -> Optional[DispatchPolicy]:
     return _POLICY
 
 
+# ------------------------------------------------------ resilience seam
+# `mode_override` is the degradation ladder's "ref rung" (core/resilience.py):
+# every dispatch inside the context resolves to the given mode (in practice
+# MODE_REF), sidestepping a kernel that keeps failing. force_pallas still
+# wins — parity tests pin the kernel path even under an active ladder.
+_MODE_OVERRIDE: Optional[str] = None
+
+# `set_dispatch_hook` installs a callable invoked as hook(name, mode) right
+# before every kernel executes; it may raise (the fault-injection seam). One
+# hook at a time — dispatch is a global choke point.
+_DISPATCH_HOOK: Optional[Callable[[str, str], None]] = None
+
+
+@contextlib.contextmanager
+def mode_override(mode: str):
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+    global _MODE_OVERRIDE
+    prev = _MODE_OVERRIDE
+    _MODE_OVERRIDE = mode
+    try:
+        yield
+    finally:
+        _MODE_OVERRIDE = prev
+
+
+def set_dispatch_hook(hook: Optional[Callable[[str, str], None]]) -> None:
+    global _DISPATCH_HOOK
+    _DISPATCH_HOOK = hook
+
+
+def get_dispatch_hook() -> Optional[Callable[[str, str], None]]:
+    return _DISPATCH_HOOK
+
+
+@contextlib.contextmanager
+def dispatch_hook(hook: Callable[[str, str], None]):
+    prev = _DISPATCH_HOOK
+    set_dispatch_hook(hook)
+    try:
+        yield
+    finally:
+        set_dispatch_hook(prev)
+
+
 def _modes_runnable(backend: str) -> Tuple[str, ...]:
     """Modes that can actually execute on `backend` (for an eligible call)."""
     if backend == "tpu":
@@ -355,6 +401,8 @@ def resolve_mode(
     if not spec.eligible(*args, **kwargs):
         return MODE_REF
     be = backend or jax.default_backend()
+    if _MODE_OVERRIDE is not None and not force_pallas:
+        return _MODE_OVERRIDE
     if not force_pallas:
         policy = get_policy()
         if policy is not None:
@@ -403,6 +451,8 @@ def dispatch(
     mode = resolve_mode(
         name, *args, force_pallas=force_pallas, backend=backend, **kwargs
     )
+    if _DISPATCH_HOOK is not None:
+        _DISPATCH_HOOK(name, mode)  # may raise: the fault-injection seam
     if mode == MODE_REF:
         return spec.ref_fn(*args, **kwargs)
     try:

@@ -335,6 +335,16 @@ def test_rollup_schema_roundtrip(tmp_path):
                           "rowsharded_seconds": 0.006, "counts_match": True,
                           "peak_rows_replicated": 37,
                           "peak_shard_rows_rowsharded": 21},
+        load_balance={"P": 64, "shards_holding_half_before": 9,
+                      "shards_holding_half_after": 27,
+                      "max_over_mean_before": 4.1,
+                      "max_over_mean_after": 1.2,
+                      "reshuffle_evens_load": True},
+        resilience={"P": 4, "restart_P": 2, "phases_checkpointed": 3,
+                    "checkpoint_overhead_seconds": 0.02,
+                    "recovery_seconds": 0.4, "scratch_seconds": 2.1,
+                    "parity_ok": True,
+                    "recovered_faster_than_scratch": True},
         path=str(tmp_path / "BENCH_pipeline.json"),
     )
     payload = json.load(open(path))
@@ -346,6 +356,9 @@ def test_rollup_schema_roundtrip(tmp_path):
     assert payload["sharded_prune"]["matches_local"] is True
     assert payload["enumeration"]["count_matches_materialize"] is True
     assert payload["distributed_join"]["counts_match"] is True
+    assert payload["load_balance"]["reshuffle_evens_load"] is True
+    assert payload["resilience"]["parity_ok"] is True
+    assert payload["resilience"]["recovered_faster_than_scratch"] is True
     route_key = f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}"
     assert payload["policy"]["routes"][route_key]["choice"] == registry.ROUTE_PACKED
 
@@ -367,6 +380,12 @@ def test_rollup_schema_roundtrip(tmp_path):
      "missing key 'replicated_seconds'"),
     (lambda p: p.update(distributed_join=[1]),
      "distributed_join must be a dict"),
+    (lambda p: p.update(load_balance={"P": 64}),
+     "missing key 'shards_holding_half_before'"),
+    (lambda p: p.update(load_balance=[1]), "load_balance must be a dict"),
+    (lambda p: p.update(resilience={"P": 4, "restart_P": 2}),
+     "missing key 'phases_checkpointed'"),
+    (lambda p: p.update(resilience=[1]), "resilience must be a dict"),
 ])
 def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
     registry.set_policy(None)

@@ -1,0 +1,467 @@
+"""Fault-tolerant elastic execution (core/resilience.py + the re-enterable
+pipeline driver + checkpoint torn-write hardening).
+
+The acceptance bar: a shard lost at ANY phase boundary (and mid-wave) on
+1/2/4/8 sim shards — and on a real 8-device spmd mesh — recovers onto the
+same or a SMALLER shard count and lands bit-identical to the fault-free run
+(omega, endpoint-consistent edge mask, and the committed phase trajectory).
+Monotone phases make phase boundaries exact consistency points; these tests
+pin that argument end to end.
+"""
+import glob
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import pytest
+
+from repro.graph import rmat_graph
+from repro.core import Template, prune, enumerate_matches
+from repro.core import resilience as res
+from repro.core import loadbalance as lb
+from repro.checkpoint import ckpt
+from repro.kernels import registry
+
+
+def _graph():
+    return rmat_graph(9, edge_factor=6, seed=5)
+
+
+def _template():
+    # acyclic, repeated labels -> PC + union-of-paths TDS: K=2 constraints,
+    # i.e. phases 0 (LCC), 1 (NLCC-path + LCC re-run), 2 (TDS)
+    return Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)])
+
+
+KW = dict(guarantee_precision=False)
+
+
+@pytest.fixture(scope="module")
+def base():
+    return prune(_graph(), _template(), **KW)
+
+
+def _traj(result):
+    return [(p.phase, p.active_vertices, p.active_edges, p.omega_bits)
+            for p in result.phases]
+
+
+def _assert_bit_identical(a, b, tag):
+    np.testing.assert_array_equal(a.omega, b.omega, err_msg=tag)
+    np.testing.assert_array_equal(a.edge_mask, b.edge_mask, err_msg=tag)
+    np.testing.assert_array_equal(a.vertex_mask, b.vertex_mask, err_msg=tag)
+    assert _traj(a) == _traj(b), tag
+
+
+# ------------------------------------------------------------ fault injector
+def test_fault_spec_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        res.FaultSpec(kind="meteor_strike")
+    with pytest.raises(ValueError, match="ladder rung"):
+        res.FaultSpec(kind=res.FAULT_SHARD_LOSS, cleared_by="nope")
+
+
+def test_injector_is_deterministic():
+    def drive(inj):
+        seen = []
+        for phase in range(3):
+            inj.begin_phase(phase)
+            for site in ("lcc", "nlcc", "wave", "tds"):
+                try:
+                    inj.event(site, wave=0 if site == "wave" else None)
+                except res.InjectedFault as e:
+                    seen.append((phase, site, e.kind))
+        return seen
+
+    plan = [res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1, site="nlcc"),
+            res.FaultSpec(kind=res.FAULT_COLLECTIVE_TIMEOUT, phase=2,
+                          site="wave", wave=0, times=2)]
+    runs = [drive(res.FaultInjector(plan)) for _ in range(2)]
+    assert runs[0] == runs[1]
+    assert (1, "nlcc", "shard_loss") in runs[0]
+
+
+def test_injector_after_and_times():
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_TRANSIENT_KERNEL, site="lcc", after=1, times=1)])
+    inj.begin_phase(0)
+    inj.event("lcc")  # skipped (after=1)
+    with pytest.raises(res.TransientKernelFailure):
+        inj.event("lcc")
+    inj.event("lcc")  # exhausted (times=1)
+    assert [f["site"] for f in inj.fired] == ["lcc"]
+
+
+def test_injector_random_plan_is_seed_deterministic():
+    a = res.FaultInjector.random(7, n_phases=3, n_faults=4,
+                                 kinds=res.FAULT_KINDS)
+    b = res.FaultInjector.random(7, n_phases=3, n_faults=4,
+                                 kinds=res.FAULT_KINDS)
+    assert [x.spec for x in a.armed] == [x.spec for x in b.armed]
+    c = res.FaultInjector.random(8, n_phases=3, n_faults=4,
+                                 kinds=res.FAULT_KINDS)
+    assert [x.spec for x in a.armed] != [x.spec for x in c.armed]
+
+
+def test_instrument_prims_traces_and_injects():
+    from repro.core.engine import axis_prims
+
+    prims = axis_prims("shards")
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_COLLECTIVE_TIMEOUT, site="prim:psum")])
+    wrapped = res.instrument_prims(prims, inj)
+    assert type(wrapped) is type(prims)
+    inj.begin_phase(0)
+    with pytest.raises(res.CollectiveTimeout):
+        wrapped.psum(np.ones(3))
+    assert inj.prim_trace["psum"] == 1
+
+
+def test_registry_dispatch_hook_seam():
+    feats = np.zeros((8, 4, 8), np.float32)
+    mask = np.zeros((8, 4), bool)
+    calls = []
+    with registry.dispatch_hook(lambda name, mode: calls.append((name, mode))):
+        registry.dispatch("segment_agg", feats, mask)
+    assert calls and calls[0][0] == "segment_agg"
+    # a raising hook propagates (the fault seam) and uninstalls cleanly
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_TRANSIENT_KERNEL, site="dispatch",
+        kernel="segment_agg")])
+    inj.begin_phase(0)
+    with registry.dispatch_hook(inj.on_dispatch):
+        with pytest.raises(res.TransientKernelFailure):
+            registry.dispatch("segment_agg", feats, mask)
+    assert registry.get_dispatch_hook() is None
+
+
+def test_registry_mode_override():
+    feats = np.zeros((8, 4, 8), np.float32)
+    mask = np.zeros((8, 4), bool)
+    with registry.mode_override(registry.MODE_REF):
+        assert (registry.resolve_mode("segment_agg", feats, mask)
+                == registry.MODE_REF)
+    with pytest.raises(ValueError):
+        with registry.mode_override("warp-drive"):
+            pass
+
+
+# ------------------------------------------------- checkpoint torn-write
+def _tree():
+    return {"omega": np.arange(12, dtype=np.int32).reshape(3, 4),
+            "edge_active": np.ones(5, bool)}
+
+
+def test_restore_skips_truncated_checkpoint(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree())
+    ckpt.save_checkpoint(d, 2, {k: v * 0 for k, v in _tree().items()})
+    # tear the newest checkpoint's array payload mid-file
+    [arrays] = glob.glob(os.path.join(d, "step_000000000002", "*.npz"))
+    blob = open(arrays, "rb").read()
+    with open(arrays, "wb") as f:
+        f.write(blob[:len(blob) // 2])
+    assert ckpt.latest_step(d) == 2
+    assert not ckpt.checkpoint_valid(os.path.join(d, "step_000000000002"))
+    with pytest.warns(RuntimeWarning, match="corrupt/partial checkpoint"):
+        assert ckpt.latest_valid_step(d) == 1
+    with pytest.warns(RuntimeWarning):
+        tree, meta = ckpt.restore_checkpoint(d, _tree())
+    assert meta["step"] == 1
+    np.testing.assert_array_equal(tree["omega"], _tree()["omega"])
+
+
+def test_restore_skips_corrupt_manifest(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 3, _tree())
+    ckpt.save_checkpoint(d, 4, _tree())
+    with open(os.path.join(d, "step_000000000004", "manifest.json"), "w") as f:
+        f.write("{ torn")
+    with pytest.warns(RuntimeWarning, match="corrupt/partial"):
+        assert ckpt.latest_valid_step(d) == 3
+    # an explicitly requested corrupt step still raises loudly
+    with pytest.raises(Exception):
+        ckpt.restore_checkpoint(d, _tree(), step=4)
+
+
+def test_restore_no_valid_checkpoints(tmp_path):
+    d = str(tmp_path)
+    ckpt.save_checkpoint(d, 1, _tree())
+    with open(os.path.join(d, "step_000000000001", "manifest.json"), "w") as f:
+        f.write("!")
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError, match="no valid checkpoints"):
+            ckpt.restore_checkpoint(d, _tree())
+
+
+# ------------------------------------------- phase-boundary checkpointing
+def test_phase_checkpoints_written_and_harmless(tmp_path, base):
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    out = prune(_graph(), _template(), partition=4, resilience=cfg, **KW)
+    rs = out.stats["resilience"]
+    n_phases = out.stats["n_constraints"] + 1
+    assert rs["checkpoints"] == n_phases
+    assert len(rs["checkpoint_seconds"]) == n_phases
+    assert rs["restarts"] == [] and rs["rebalances"] == []
+    _assert_bit_identical(base, out, "checkpointing-only run")
+    # the newest checkpoint holds the final original-coordinate state
+    tree, meta = ckpt.restore_checkpoint(
+        str(tmp_path), {"omega": np.zeros(base.omega.shape, bool),
+                        "edge_active": np.zeros(base.edge_mask.shape, bool)})
+    assert meta["phase"] == n_phases - 1
+    np.testing.assert_array_equal(np.asarray(tree["omega"]), base.omega)
+
+
+def test_checkpoint_cadence_and_restore_truncation(tmp_path, base):
+    # checkpoint_every=2 -> snapshots only at phases 0 and 2; a fault at
+    # phase 2 restores phase 0 and replays 1..2 (committed trajectory must
+    # not duplicate the replayed phases)
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=2)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path),
+                               checkpoint_every=2, injector=inj)
+    out = prune(_graph(), _template(), partition=4, resilience=cfg, **KW)
+    rs = out.stats["resilience"]
+    assert [r["restored_phase"] for r in rs["restarts"]] == [0]
+    _assert_bit_identical(base, out, "cadence-2 recovery")
+
+
+# --------------------------------------------------- recovery-parity sweep
+@pytest.mark.parametrize("P", [1, 2, 4, 8])
+@pytest.mark.parametrize("phase", [0, 1, 2])
+def test_shard_loss_recovery_parity(tmp_path, base, P, phase):
+    """Shard loss at every phase boundary on 1/2/4/8 sim shards: restore the
+    last checkpoint (possibly none -> from-scratch) and land bit-identical."""
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS,
+                                           phase=phase)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    out = prune(_graph(), _template(), partition=P, resilience=cfg, **KW)
+    rs = out.stats["resilience"]
+    assert len(rs["restarts"]) == 1
+    assert rs["restarts"][0]["restored_phase"] == phase - 1
+    assert rs["recovery_seconds"] > 0
+    _assert_bit_identical(base, out, f"P={P} phase={phase}")
+
+
+def test_recovery_onto_fewer_shards_and_enumeration(tmp_path, base):
+    """P=4 -> restart_P=2 restore: bit-parity, and enumeration still works
+    (the result drops its backend and takes the host route)."""
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj,
+                               elastic=res.ElasticConfig(restart_P=2))
+    out = prune(_graph(), _template(), partition=4, resilience=cfg, **KW)
+    r = out.stats["resilience"]["restarts"][0]
+    assert (r["from_P"], r["to_P"]) == (4, 2)
+    assert out.backend is None  # compacted coordinates: host-route enumeration
+    _assert_bit_identical(base, out, "elastic 4->2")
+    be = enumerate_matches(base)
+    oe = enumerate_matches(out)
+    np.testing.assert_array_equal(be.embeddings, oe.embeddings)
+
+
+def test_local_backend_recovery(tmp_path, base):
+    """The driver recovers the LOCAL backend too (plain restart, original
+    graph, restored original-coordinate state)."""
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=2)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    out = prune(_graph(), _template(), resilience=cfg, **KW)
+    assert len(out.stats["resilience"]["restarts"]) == 1
+    _assert_bit_identical(base, out, "local recovery")
+
+
+def test_mid_wave_fault_recovery(tmp_path, base):
+    """A fault INSIDE a constraint (2nd NLCC wave batch) rolls back to the
+    previous phase boundary — partial wave progress must not leak."""
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS,
+                                           phase=1, site="wave", wave=1)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    # wave=4 forces multiple batches per constraint at this graph size
+    out = prune(_graph(), _template(), partition=4, wave=4,
+                resilience=cfg, **KW)
+    assert inj.fired and inj.fired[0]["site"] == "wave"
+    assert inj.fired[0]["wave"] == 1
+    assert len(out.stats["resilience"]["restarts"]) == 1
+    _assert_bit_identical(base, out, "mid-wave recovery")
+
+
+def test_seeded_random_fault_plan_recovers(tmp_path, base):
+    out = prune(_graph(), _template(), partition=4,
+                resilience=res.ResilienceConfig(
+                    checkpoint_dir=str(tmp_path),
+                    injector=res.FaultInjector.random(3, n_phases=3)),
+                **KW)
+    _assert_bit_identical(base, out, "random plan")
+
+
+# ------------------------------------------------------- degradation ladder
+def test_transient_collective_retries_in_place(base):
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_COLLECTIVE_TIMEOUT, phase=1, cleared_by="retry")])
+    out = prune(_graph(), _template(), partition=4,
+                resilience=res.ResilienceConfig(injector=inj), **KW)
+    rs = out.stats["resilience"]
+    assert rs["restarts"] == []  # absorbed by the ladder, no checkpoint needed
+    assert [r for r, _ in rs["ladder"]] == ["retry"]
+    _assert_bit_identical(base, out, "retry in place")
+
+
+def test_kernel_fault_escalates_to_ref_rung(base):
+    # times=0 (every match) + cleared_by="ref": retries keep failing until
+    # the ladder forces reference kernels via registry.mode_override
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_TRANSIENT_KERNEL, phase=1, cleared_by="ref", times=0)])
+    out = prune(_graph(), _template(), partition=4,
+                resilience=res.ResilienceConfig(injector=inj), **KW)
+    rungs = [r for r, _ in out.stats["resilience"]["ladder"]]
+    assert rungs == ["retry", "retry", "ref"]
+    _assert_bit_identical(base, out, "ref rung")
+
+
+def test_resource_exhaustion_backs_off_chunk(base):
+    inj = res.FaultInjector([res.FaultSpec(
+        kind=res.FAULT_RESOURCE_EXHAUSTED, phase=2, site="tds",
+        cleared_by="chunk")])
+    out = prune(_graph(), _template(), partition=4, tds_chunk=4096,
+                resilience=res.ResilienceConfig(injector=inj), **KW)
+    rs = out.stats["resilience"]
+    assert [r for r, _ in rs["ladder"]] == ["chunk"]
+    assert out.backend.tds_chunk == 4096 // 4  # RetryPolicy.chunk_backoff_factor
+    _assert_bit_identical(base, out, "chunk back-off")
+
+
+def test_unrecoverable_without_checkpoint_dir():
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    with pytest.raises(res.ResilienceExhausted, match="no checkpoint_dir"):
+        prune(_graph(), _template(), partition=4,
+              resilience=res.ResilienceConfig(injector=inj), **KW)
+
+
+def test_restart_budget_exhausts(tmp_path):
+    # a PERSISTENT fault (times=0): every restart re-fires it until the
+    # restart budget runs out
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS,
+                                           phase=1, times=0)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj,
+                               max_restarts=2)
+    with pytest.raises(res.ResilienceExhausted, match="restart budget"):
+        prune(_graph(), _template(), partition=4, resilience=cfg, **KW)
+    assert len(inj.fired) == 3  # initial attempt + 2 restarted attempts
+
+
+# ------------------------------------------------- imbalance + elastic unit
+def test_device_shard_counts_match_host_oracle(base):
+    out = prune(_graph(), _template(), partition=4, **KW)
+    counts = np.asarray(out.backend.shard_counts_dev())
+    host = lb.imbalance_stats(_graph(), out.state, 4, out.dg)
+    np.testing.assert_array_equal(counts[:, 0], host.vertices_per_shard)
+    np.testing.assert_array_equal(counts[:, 1], host.edges_per_shard)
+    dev_stats = lb.imbalance_stats_from_counts(counts[:, 0], counts[:, 1])
+    assert dev_stats.max_over_mean_edges == host.max_over_mean_edges
+    assert dev_stats.shards_holding_half == host.shards_holding_half
+
+
+def test_imbalance_triggered_rebalance(base):
+    # trigger ~1.0 trips at the first boundary: compact-and-reshuffle onto
+    # P=2 with NO fault, still bit-identical
+    cfg = res.ResilienceConfig(elastic=res.ElasticConfig(
+        imbalance_trigger=1.0, rebalance_P=2))
+    out = prune(_graph(), _template(), partition=4, resilience=cfg, **KW)
+    rb = out.stats["resilience"]["rebalances"]
+    assert rb and rb[0]["from_P"] == 4 and rb[0]["to_P"] == 2
+    assert rb[0]["max_over_mean_before"] > 1.0
+    assert out.backend is None
+    _assert_bit_identical(base, out, "triggered rebalance")
+
+
+def test_elastic_handoff_remap_roundtrip(base):
+    g = _graph()
+    state = base.state
+    out = lb.elastic_handoff(g, base.dg, state, 2, seed=11)
+    assert out is not None
+    sub, part, state_new, remap = out
+    assert part.P == 2 and sub.n == int(base.vertex_mask.sum())
+    back = lb.remap_state_to_original(state_new, remap, base.template.n0)
+    # roundtrip = the endpoint-consistent restriction of the original state
+    vact = base.vertex_mask
+    np.testing.assert_array_equal(back.omega, base.omega * vact[:, None])
+    np.testing.assert_array_equal(back.edge_active, base.edge_mask)
+
+
+def test_elastic_handoff_degenerate_returns_none():
+    g = _graph()
+    n0 = 4
+    empty = lb.elastic_handoff(
+        g, prune(g, _template(), **KW).dg,
+        type(prune(g, _template(), **KW).state)(
+            omega=np.zeros((g.n, n0), bool),
+            edge_active=np.zeros(g.m, bool)),
+        2)
+    assert empty is None
+
+
+# ----------------------------------------------------------- spmd backend
+_needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="spmd in-process tests need 8 devices "
+           "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+@_needs_devices
+def test_spmd_shard_loss_restarts_onto_smaller_mesh(tmp_path, base):
+    from repro.launch.mesh import make_shard_mesh
+
+    inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj,
+                               elastic=res.ElasticConfig(restart_P=4))
+    out = prune(_graph(), _template(), mesh=make_shard_mesh(8),
+                resilience=cfg, **KW)
+    assert out.stats["backend"] == "spmd"
+    r = out.stats["resilience"]["restarts"][0]
+    assert (r["from_P"], r["to_P"]) == (8, 4)
+    _assert_bit_identical(base, out, "spmd 8->4")
+
+
+SPMD_RESILIENCE_SCRIPT = textwrap.dedent(
+    """
+    import os, tempfile
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import numpy as np
+    from repro.graph import rmat_graph
+    from repro.core import Template, prune
+    from repro.core import resilience as res
+    from repro.launch.mesh import make_shard_mesh
+
+    g = rmat_graph(9, edge_factor=6, seed=5)
+    tmpl = Template([3, 4, 5, 3], [(0, 1), (1, 2), (2, 3)])
+    base = prune(g, tmpl, guarantee_precision=False)
+    with tempfile.TemporaryDirectory() as d:
+        inj = res.FaultInjector([res.FaultSpec(kind=res.FAULT_SHARD_LOSS,
+                                               phase=1)])
+        cfg = res.ResilienceConfig(checkpoint_dir=d, injector=inj,
+                                   elastic=res.ElasticConfig(restart_P=4))
+        out = prune(g, tmpl, mesh=make_shard_mesh(8), resilience=cfg,
+                    guarantee_precision=False)
+        assert out.stats["backend"] == "spmd"
+        r = out.stats["resilience"]["restarts"][0]
+        assert (r["from_P"], r["to_P"]) == (8, 4), r
+        assert np.array_equal(base.omega, out.omega)
+        assert np.array_equal(base.edge_mask, out.edge_mask)
+    print("SPMD_RESILIENCE_OK")
+    """
+)
+
+
+def test_spmd_resilience_subprocess():
+    if len(jax.devices()) >= 8:
+        pytest.skip("covered in-process by the 8-device test")
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SPMD_RESILIENCE_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "SPMD_RESILIENCE_OK" in out.stdout
