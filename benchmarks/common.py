@@ -149,6 +149,17 @@ def validate_rollup(payload: Dict) -> None:
         need(lb, "max_over_mean_before", (int, float), "load_balance")
         need(lb, "max_over_mean_after", (int, float), "load_balance")
         need(lb, "reshuffle_evens_load", bool, "load_balance")
+    if "multi_tenant" in payload:  # additive (PR 9): batched-queries point
+        mt = payload["multi_tenant"]
+        if not isinstance(mt, dict):
+            raise ValueError("roll-up multi_tenant must be a dict")
+        need(mt, "B", int, "multi_tenant")
+        need(mt, "batched_seconds", (int, float), "multi_tenant")
+        need(mt, "sequential_seconds", (int, float), "multi_tenant")
+        need(mt, "counts_match", bool, "multi_tenant")
+        need(mt, "serve_queries", int, "multi_tenant")
+        need(mt, "serve_dropped", int, "multi_tenant")
+        need(mt, "serve_batches", int, "multi_tenant")
     if "resilience" in payload:  # additive (PR 7): fault-recovery point
         rs = payload["resilience"]
         if not isinstance(rs, dict):
@@ -174,6 +185,7 @@ def write_rollup(
     enumeration: Optional[Dict] = None,
     distributed_join: Optional[Dict] = None,
     load_balance: Optional[Dict] = None,
+    multi_tenant: Optional[Dict] = None,
     resilience: Optional[Dict] = None,
     policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
@@ -204,6 +216,11 @@ def write_rollup(
     "max_over_mean_before"/"..._after": ..., "reshuffle_evens_load": ...} —
     the Fig. 7 reshuffle-evenness point from benchmarks/load_balance.py
     (additive, PR 7)
+    multi_tenant  {"B": ..., "batched_seconds": ..., "sequential_seconds":
+    ..., "counts_match": ..., "serve_queries": ..., "serve_dropped": ...,
+    "serve_batches": ...} — the template-batched execution point from
+    benchmarks/multi_tenant.py (additive, PR 9; the CI smoke job gates
+    counts_match and batched_seconds < sequential_seconds)
     resilience  {"P": ..., "restart_P": ..., "phases_checkpointed": ...,
     "checkpoint_overhead_seconds": ..., "recovery_seconds": ...,
     "scratch_seconds": ..., "parity_ok": ...,
@@ -241,6 +258,8 @@ def write_rollup(
         payload["distributed_join"] = dict(distributed_join)
     if load_balance:
         payload["load_balance"] = dict(load_balance)
+    if multi_tenant:
+        payload["multi_tenant"] = dict(multi_tenant)
     if resilience:
         payload["resilience"] = dict(resilience)
     validate_rollup(payload)

@@ -1,0 +1,137 @@
+"""Beyond-paper: template-batched multi-tenant execution vs per-query runs.
+
+The multi-tenant claim (core/batch.py): B same-bucket template queries
+stacked along a lane axis run the whole prune pipeline through ONE traced
+program set and one kernel-dispatch sequence — vs B sequential `prune` calls
+each paying their own trace, compile, dispatch chains, and host syncs. This
+suite records that crossover at B=8 plus a serving-engine drain point
+(serve/graph_query.py: 32 mixed queries through the admission queue and
+shape-bucket batcher, zero dropped).
+
+Both paths run guarantee_precision=False (cycle/path constraints only) so
+the measured delta is the device-dispatch economics this PR changed, not the
+host-side TDS row joins both paths share. Per-query results must be
+BIT-IDENTICAL between the two paths (hard assert -> counts_match); the CI
+smoke job gates on counts_match and batched_seconds < sequential_seconds.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.template import Template
+from repro.core.pipeline import prune
+from repro.core.batch import prune_batch
+from repro.core.enumerate import count_matches
+from benchmarks.common import graph_for, save
+
+B = 8
+
+# eight same-bucket (pow2 n0 -> 4) WDC-flavored variants: paths, squares,
+# triangles, repeated-label (counted) patterns — mid-frequency labels
+TEMPLATES = [
+    ("path-repeat", [4, 3, 5, 3], [(0, 1), (1, 2), (2, 3)]),
+    ("square", [3, 4, 5, 6], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+    ("square-rare", [6, 7, 8, 7], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+    ("triangle", [5, 4, 4], [(0, 1), (1, 2), (2, 0)]),
+    ("path-mid", [4, 5, 6, 5], [(0, 1), (1, 2), (2, 3)]),
+    ("square-mid", [5, 6, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+    ("triangle-counted", [3, 3, 4], [(0, 1), (1, 2), (2, 0)]),
+    ("square-wide", [6, 5, 4, 5], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+]
+
+PRUNE_KW = dict(guarantee_precision=False)
+
+
+def run(scale: str = "small") -> Dict:
+    g = graph_for(scale)
+    label_freq = g.label_frequency()
+    templates = [Template(labels, edges) for _, labels, edges in TEMPLATES]
+
+    # warm-up: populate any persistent compilation caches on both paths so
+    # the timed comparison is steady-state, not first-touch
+    prune_batch(g, templates, label_freq=label_freq, **PRUNE_KW)
+    prune(g, templates[0], label_freq=label_freq, **PRUNE_KW)
+
+    t0 = time.perf_counter()
+    bres = prune_batch(g, templates, label_freq=label_freq, **PRUNE_KW)
+    batched_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    seq = [prune(g, t, label_freq=label_freq, **PRUNE_KW) for t in templates]
+    sequential_s = time.perf_counter() - t0
+
+    counts_match = True
+    per_query = {}
+    for (name, _, _), t, bl, sl in zip(TEMPLATES, templates,
+                                       bres.results, seq):
+        bits_ok = (np.array_equal(np.asarray(bl.state.omega),
+                                  np.asarray(sl.state.omega))
+                   and np.array_equal(np.asarray(bl.state.edge_active),
+                                      np.asarray(sl.state.edge_active)))
+        cb = int(count_matches(bl.dg, bl.state, t,
+                               label_freq=label_freq).n_embeddings)
+        cs = int(count_matches(sl.dg, sl.state, t,
+                               label_freq=label_freq).n_embeddings)
+        ok = bits_ok and cb == cs
+        assert ok, (name, bits_ok, cb, cs)
+        counts_match &= ok
+        per_query[name] = {"n_embeddings": cb, "bit_identical": bits_ok}
+
+    serve = _serve_drain(g)
+
+    out = {
+        "graph": {"n": g.n, "m": g.m},
+        "B": B,
+        "batched_seconds": batched_s,
+        "sequential_seconds": sequential_s,
+        "speedup": sequential_s / max(batched_s, 1e-9),
+        "counts_match": counts_match,
+        "bucket": bres.stats["batched"]["bucket"],
+        "dispatch_routes": bres.stats["dispatch_routes"],
+        "per_query": per_query,
+        "serve": serve,
+        "rollup": {
+            "B": B,
+            "batched_seconds": batched_s,
+            "sequential_seconds": sequential_s,
+            "counts_match": counts_match,
+            "serve_queries": serve["n_queries"],
+            "serve_dropped": serve["n_dropped"],
+            "serve_batches": serve["n_batches"],
+        },
+    }
+    save("multi_tenant", out)
+    return out
+
+
+def _serve_drain(g, n_queries: int = 32) -> Dict:
+    """Drain a mixed-template workload through the serving engine: admission
+    queue -> shape-bucket batcher -> batched prunes -> results. Every query
+    must come back (zero dropped; no deadlines set here, so zero missed)."""
+    from repro.serve import GraphQueryEngine, example_workload, MODE_PRUNE
+
+    eng = GraphQueryEngine(g, max_batch=B, max_wait_s=0.0, **PRUNE_KW)
+    templates = example_workload(n_queries, seed=1,
+                                 labels_max=int(g.labels.max()))
+    t0 = time.perf_counter()
+    ids = [eng.submit(t, mode=MODE_PRUNE) for t in templates]
+    results = eng.drain()
+    dt = time.perf_counter() - t0
+    assert len(results) == len(ids) and eng.n_pending == 0
+    n_ok = sum(r.status == "ok" for r in results)
+    return {
+        "n_queries": n_queries,
+        "n_ok": n_ok,
+        "n_dropped": n_queries - len(results),
+        "n_deadline_missed": n_queries - n_ok,
+        "n_batches": eng.stats["n_batches"],
+        "seconds": dt,
+        "queries_per_second": n_queries / max(dt, 1e-9),
+    }
+
+
+if __name__ == "__main__":
+    print(run())

@@ -33,6 +33,7 @@ SUITES = [
     ("exploratory", "Fig 10: progressive relaxation"),
     ("enumeration_compare", "Tables 4/5: vs tree-search enumeration"),
     ("distributed_join", "beyond-paper: replicated vs distributed-rows join"),
+    ("multi_tenant", "beyond-paper: template-batched B-query execution"),
     ("template_sensitivity", "Table 6: template topology family"),
     ("rmat_distributions", "Table 10: R-MAT skew sweep"),
     ("frontier_edge_prune", "beyond-paper: CC edge-exactness, TDS skipped"),
@@ -96,7 +97,7 @@ def main(argv=None):
                            for k in ("graph", "phases", "nlcc_wave",
                                      "sharded_prune", "enumeration",
                                      "distributed_join", "load_balance",
-                                     "resilience", "policy")}
+                                     "multi_tenant", "resilience", "policy")}
         path = common.write_rollup(
             suites, args.scale,
             graph=dp.get("graph") or carried.get("graph"),
@@ -110,6 +111,8 @@ def main(argv=None):
                 or carried.get("distributed_join")),
             load_balance=(payloads.get("load_balance", {}).get("rollup")
                           or carried.get("load_balance")),
+            multi_tenant=(payloads.get("multi_tenant", {}).get("rollup")
+                          or carried.get("multi_tenant")),
             resilience=(payloads.get("resilience", {}).get("rollup")
                         or carried.get("resilience")),
             policy_fallback=carried.get("policy"),

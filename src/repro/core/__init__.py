@@ -8,6 +8,7 @@ from repro.core.template import Template, NonLocalConstraint, generate_constrain
 from repro.core.state import PruneState, init_state, pack_bits, unpack_bits
 from repro.core.lcc import TemplateDev, lcc_iteration, lcc_fixpoint
 from repro.core.pipeline import prune, PruneResult
+from repro.core.batch import prune_batch, BatchedPruneResult, BatchedEngine
 from repro.core.engine import (
     LocalBackend, SimBackend, SpmdBackend, make_backend,
 )
@@ -35,6 +36,9 @@ __all__ = [
     "lcc_fixpoint",
     "prune",
     "PruneResult",
+    "prune_batch",
+    "BatchedPruneResult",
+    "BatchedEngine",
     "LocalBackend",
     "SimBackend",
     "SpmdBackend",

@@ -1,0 +1,601 @@
+"""Template-batched multi-tenant execution: one dispatch for B queries.
+
+The production scenario is many analysts holding many search templates
+against ONE background metadata graph. Per-query execution wastes the
+machine — the tuned kernels run in milliseconds while per-dispatch/host-sync
+overhead dominates. This module stacks B same-bucket templates along a new
+leading batch ("lane") axis and runs the whole prune pipeline for all B
+queries through shared kernel dispatches:
+
+  - state grows a lane axis: omega [P, B, n_local+1, W], edge_active
+    [P, B, P, B_arcs] — the per-shard program bodies of core/engine.py are
+    reused VERBATIM under an inner (unnamed) ``jax.vmap`` over lanes, nested
+    inside the backend's shard-axis wrapper (sim vmap-with-axis-name or spmd
+    shard_map). vmap's collective batching rules make the lane axis free:
+    the all_to_all/psum collectives of a lane see only that lane's data.
+  - template constants (adjacency, multiplicity requirements) become TRACED
+    per-lane arrays instead of closed-over constants, zero-padded to the
+    common bucket width n0p — padding is bit-inert through the LCC math
+    (zero adjacency rows satisfy coverage vacuously, zero requirements are
+    trivially met, padded omega columns start 0 and stay 0).
+  - per-lane convergence is handled by MASKING, not exiting: the batched LCC
+    while_loop runs until every lane converges, freezing already-converged
+    lanes via lax.while_loop's select semantics (bit-exact per-lane iterate
+    sequences); NLCC wave loops run in lockstep with exhausted lanes
+    supplying all-pad (-1) wave sources, which are inert in the survivor
+    reduction and the keep-column scatter.
+  - the lockstep driver runs phase k of every lane in one batch: cycle/path
+    constraints grouped by (walk length, cyclicity) execute as job-axis
+    vmapped wave programs with ONE stacked head-planes readback per phase
+    and ONE host bool (did anything change?) gating the joint LCC re-run —
+    a lane whose constraint changed nothing is at LCC fixpoint, so the
+    joint re-run is a no-op for it (bit parity with sequential execution).
+  - TDS constraints stay host-side row joins (as in every backend), bridged
+    per lane through a lane gather/scatter.
+  - per-query deadlines cancel by masking: a deadline-missed lane's state is
+    zeroed at a phase boundary and it goes inert for the rest of the batch —
+    never a batch abort.
+
+Routing: the batched wave executor resolves ``prune.nlcc`` through the
+dispatch policy under a BATCHED bucket key (`registry.batch_bucket`, e.g.
+``b8xp4x512x1024``), so batched routes tune separately from single-query
+ones; batch-size-1 lookups fall back to unbatched cache entries. Batched
+waves always execute as one dispatch per wave (seed + lax.scan over hops —
+the fused shape); the route choice picks the frontier representation
+(packed uint32 words vs boolean planes). The one-wave-deep overlap pipeline
+of the single-query executor is intentionally skipped: with B queries per
+dispatch the batch axis already amortizes what the overlap hid.
+
+Bit-parity contract (tests/test_batch.py): for any mix of cyclic / path /
+TDS-bearing same-bucket templates, each lane's final omega, edge mask, and
+match counts are bit-identical to running that template alone through
+``prune`` on the same backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.graph.structs import Graph, DeviceGraph
+from repro.graph.partition import EdgePartition, partition_graph
+from repro.core.state import PruneState, pack_bits, unpack_bits, packed_words
+from repro.core.lcc import TemplateDev
+from repro.core.template import (Template, NonLocalConstraint,
+                                 generate_constraints)
+from repro.core import engine as engine_mod
+from repro.core import nlcc as nlcc_mod
+from repro.core import tds as tds_mod
+from repro.core.engine import (SHARD_AXIS, ShardArrays, axis_prims,
+                               lcc_shard_fixpoint, frontier_shard_hop,
+                               frontier_shard_hop_unpacked,
+                               _seed_frontier_planes, _sharded_wave_survivors,
+                               _scatter_keep)
+from repro.core.pipeline import PruneResult
+
+STATUS_OK = "ok"
+STATUS_DEADLINE_MISSED = "deadline_missed"
+
+
+class _LaneMasks:
+    """TemplateMasks duck-type whose constants are TRACED per-lane arrays —
+    what lets one traced program serve every lane of the batch. `n0` and
+    `needs_counts` stay static (shared across the batch: the padded bucket
+    width and the any-lane counts flag)."""
+
+    def __init__(self, n0: int, needs_counts: bool, adj0, req, vhcl):
+        self.n0 = n0
+        self.needs_counts = needs_counts
+        self.adj0 = adj0
+        self.req = req
+        self.vertex_has_counted_label = vhcl
+
+
+def _stack_template_consts(tdevs: Sequence[TemplateDev], n0p: int):
+    """Stack per-lane template constants zero-padded to [B, n0p, ...].
+
+    Lanes whose template does not need multiplicity counts get an all-zero
+    requirement row — ``cnt >= 0`` is trivially true, which is exactly the
+    single-template engine's "skip the counts check" branch, bit for bit."""
+    B = len(tdevs)
+    C = max(int(td.req.shape[1]) for td in tdevs)
+    needs_counts = any(td.needs_counts for td in tdevs)
+    adj0 = np.zeros((B, n0p, n0p), np.float32)
+    req = np.zeros((B, n0p, C), np.int32)
+    vhcl = np.zeros((B, n0p, C), np.float32)
+    for i, td in enumerate(tdevs):
+        n0 = td.n0
+        adj0[i, :n0, :n0] = np.asarray(td.adj0, np.float32)
+        if td.needs_counts:
+            ci = int(td.req.shape[1])
+            req[i, :n0, :ci] = np.asarray(td.req)
+            vhcl[i, :n0, :ci] = np.asarray(
+                td.vertex_has_counted_label, np.float32)
+    return jnp.asarray(adj0), jnp.asarray(req), jnp.asarray(vhcl), needs_counts
+
+
+def _make_sim(program: Callable, n_sharded: int) -> Callable:
+    def call(*args):
+        in_axes = (0,) * n_sharded + (None,) * (len(args) - n_sharded)
+        return jax.vmap(program, in_axes=in_axes, axis_name=SHARD_AXIS)(*args)
+
+    return jax.jit(call)
+
+
+def _make_spmd(mesh, program: Callable, n_sharded: int) -> Callable:
+    from repro.kernels import compat
+
+    spec = P(tuple(mesh.axis_names))
+
+    def per_shard(*args):
+        local = [jax.tree_util.tree_map(lambda x: x[0], a)
+                 for a in args[:n_sharded]]
+        out = program(*local, *args[n_sharded:])
+        return jax.tree_util.tree_map(lambda x: jnp.asarray(x)[None], out)
+
+    def call(*args):
+        in_specs = (spec,) * n_sharded + (P(),) * (len(args) - n_sharded)
+        fn = compat.shard_map(per_shard, mesh=mesh, in_specs=in_specs,
+                              out_specs=spec, check_vma=False)
+        return fn(*args)
+
+    return jax.jit(call)
+
+
+class BatchedEngine:
+    """The lane-stacked execution engine: B same-bucket templates, one
+    partitioned background graph, shared dispatches. Drives the same
+    per-shard program bodies as `_ShardedBackend` under an inner lane vmap;
+    P=1 (the default) is the batched analogue of the local backend (sim with
+    one shard is pinned bit-identical to local by the parity suite)."""
+
+    def __init__(self, graph: Graph, templates: Sequence[Template], *,
+                 partition=None, mesh=None, wave: int = 1024,
+                 tds_chunk: int = 4096, tds_max_rows: int = 2_000_000,
+                 work_aggregation: bool = True,
+                 guarantee_precision: bool = True):
+        from repro.kernels import registry
+
+        if not templates:
+            raise ValueError("prune_batch needs at least one template")
+        if not isinstance(graph, Graph):
+            raise TypeError("prune_batch needs the host Graph — the edge "
+                            "partition is built from host arrays")
+        buckets = {registry.shape_bucket(t.n0) for t in templates}
+        if len(buckets) != 1:
+            raise ValueError(
+                f"templates span shape buckets {sorted(buckets)}; a batch "
+                "must be same-bucket (the serving batcher groups by bucket)")
+        if any(t.n0 < 2 for t in templates):
+            raise ValueError("n0 == 1 templates are LCC-only degenerate "
+                             "cases; run them through prune()")
+        self.templates = list(templates)
+        self.Bq = len(self.templates)
+        if mesh is not None and partition is None:
+            partition = int(np.prod(tuple(mesh.shape.values())))
+        if partition is None:
+            partition = 1
+        if isinstance(partition, int):
+            partition = partition_graph(graph, partition)
+        self.part: EdgePartition = partition
+        self.mesh = mesh
+        if mesh is not None:
+            md = int(np.prod(tuple(mesh.shape.values())))
+            if md != self.part.P:
+                raise ValueError(f"mesh has {md} devices but the partition "
+                                 f"has P={self.part.P} shards")
+        order = DeviceGraph.dst_sort_order(graph)
+        self.dg = DeviceGraph.from_host(graph, order=order)
+        if self.part.P * self.part.P * self.part.B >= 2**31:
+            raise NotImplementedError(
+                "bucket tensor >= 2^31 slots; the int32 edge gather/scatter "
+                "map would overflow — shard the graph coarser")
+        self._arc_slot = jnp.asarray(self.part.arc_flat_slot[order], jnp.int32)
+        self.P = self.part.P
+        self.B = self.part.B
+        self.n_local = self.part.n_local
+        self.wave = wave
+        self.tds_chunk = tds_chunk
+        self.tds_max_rows = tds_max_rows
+        self.work_aggregation = work_aggregation
+        self.guarantee_precision = guarantee_precision
+        self.tdevs = [TemplateDev(t) for t in self.templates]
+        self.n0p = max(t.n0 for t in self.templates)
+        self.W = packed_words(self.n0p)
+        (self.adj0_b, self.req_b, self.vhcl_b,
+         self.needs_counts) = _stack_template_consts(self.tdevs, self.n0p)
+        self.arrs = self.part.device_arrays()
+        self._fns: Dict = {}
+        self._routes_taken: set = set()
+        self.omega_b: Optional[jnp.ndarray] = None
+        self.ea_b: Optional[jnp.ndarray] = None
+        self.name = "sim" if mesh is None else "spmd"
+
+    # -- program wrapping ---------------------------------------------------
+    def _fn(self, key, program: Callable, n_sharded: int) -> Callable:
+        if key not in self._fns:
+            self._fns[key] = (_make_sim(program, n_sharded)
+                              if self.mesh is None
+                              else _make_spmd(self.mesh, program, n_sharded))
+        return self._fns[key]
+
+    # -- state --------------------------------------------------------------
+    def init(self) -> None:
+        lanes = []
+        labels_local = np.asarray(self.part.labels_local)
+        vertex_valid = np.asarray(self.part.vertex_valid)
+        for t in self.templates:
+            n_labels = int(max(t.labels.max() + 1, labels_local.max() + 1))
+            lm = t.label_matrix(n_labels)  # [n0, L]
+            bits = lm.T[labels_local]  # [P, n_local, n0]
+            if t.n0 < self.n0p:  # pad lanes to the common bucket width
+                bits = np.concatenate([bits, np.zeros(
+                    bits.shape[:2] + (self.n0p - t.n0,), bool)], axis=-1)
+            bits &= vertex_valid[..., None]
+            om = np.asarray(pack_bits(jnp.asarray(bits)))
+            om = np.concatenate(
+                [om, np.zeros((self.P, 1, self.W), np.uint32)], axis=1)
+            lanes.append(om)
+        self.omega_b = jnp.asarray(np.stack(lanes, axis=1))
+        ea = np.asarray(~self.part.send_pad)  # [P, P, B]
+        self.ea_b = jnp.asarray(
+            np.broadcast_to(ea[:, None], (self.P, self.Bq) + ea.shape[1:]))
+
+    def gather_lane(self, lane: int) -> PruneState:
+        """One lane's global PruneState in the lane template's own width."""
+        flat = self.omega_b[:, lane, :self.n_local].reshape(
+            self.P * self.n_local, -1)
+        omega = unpack_bits(flat, self.n0p)[:self.part.n,
+                                            :self.templates[lane].n0]
+        ea = jnp.take(self.ea_b[:, lane].reshape(-1), self._arc_slot)
+        return PruneState(omega=omega, edge_active=ea)
+
+    def scatter_lane(self, lane: int, state: PruneState) -> None:
+        n0 = self.templates[lane].n0
+        bits = jnp.asarray(state.omega, bool)
+        if self.n0p > n0:
+            bits = jnp.concatenate([bits, jnp.zeros(
+                (bits.shape[0], self.n0p - n0), bool)], axis=1)
+        pad = self.P * self.n_local - self.part.n
+        if pad:
+            bits = jnp.concatenate(
+                [bits, jnp.zeros((pad, self.n0p), bool)], axis=0)
+        om = pack_bits(bits).reshape(self.P, self.n_local, self.W)
+        om = jnp.concatenate(
+            [om, jnp.zeros((self.P, 1, self.W), jnp.uint32)], axis=1)
+        ea_flat = jnp.zeros((self.P * self.P * self.B,), bool)
+        ea_flat = ea_flat.at[self._arc_slot].set(
+            jnp.asarray(state.edge_active, bool))
+        self.omega_b = self.omega_b.at[:, lane].set(om)
+        self.ea_b = self.ea_b.at[:, lane].set(
+            ea_flat.reshape(self.P, self.P, self.B))
+
+    def cancel_lane(self, lane: int) -> None:
+        """Deadline cancellation = masking the lane inert: zeroed candidacy
+        and edge bits are fixpoints of every sweep, so the lane rides the
+        remaining batched dispatches as a no-op instead of aborting them."""
+        self.omega_b = self.omega_b.at[:, lane].set(jnp.uint32(0))
+        self.ea_b = self.ea_b.at[:, lane].set(False)
+
+    # -- batched LCC ---------------------------------------------------------
+    def lcc(self, stats: Optional[Dict] = None) -> None:
+        prims = axis_prims(SHARD_AXIS)
+        n0p, needs_counts = self.n0p, self.needs_counts
+
+        def program(sa_dict, omega_b, ea_b, adj0_b, req_b, vhcl_b):
+            sa = ShardArrays(**sa_dict)
+
+            def lane(om, ea, adj0, req, vhcl):
+                tm = _LaneMasks(n0p, needs_counts, adj0, req, vhcl)
+                return lcc_shard_fixpoint(om, ea, sa, tm, prims)
+
+            return jax.vmap(lane)(omega_b, ea_b, adj0_b, req_b, vhcl_b)
+
+        fn = self._fn("lcc_b", program, n_sharded=3)
+        self.omega_b, self.ea_b, it = fn(
+            self.arrs, self.omega_b, self.ea_b,
+            self.adj0_b, self.req_b, self.vhcl_b)
+        if stats is not None:
+            stats["lcc_calls"] = stats.get("lcc_calls", 0) + 1
+            stats["lcc_iterations"] = (
+                stats.get("lcc_iterations", 0) + int(jnp.max(it)))
+
+    # -- batched NLCC waves ---------------------------------------------------
+    def _omega_column_b(self, lane: int, q: int) -> jnp.ndarray:
+        w, b = q // 32, q % 32
+        word = self.omega_b[:, lane, :self.n_local, w]
+        return ((word >> jnp.uint32(b)) & 1).astype(bool)
+
+    def _cand_stack_b(self, lane: int, walk: Sequence[int]) -> jnp.ndarray:
+        return jnp.stack([self._omega_column_b(lane, q) for q in walk],
+                         axis=1)  # [P, L+1, n_local]
+
+    def _route(self, L: int) -> str:
+        from repro.kernels import registry
+
+        if self.wave % 32 != 0:
+            return registry.ROUTE_UNPACKED
+        eligible = engine_mod.sharded_fused_eligible(
+            self.n_local, self.P, self.B, self.wave, L)
+        default = (registry.ROUTE_FUSED if eligible
+                   else registry.ROUTE_PACKED)
+        return registry.resolve_route(
+            nlcc_mod.NLCC_ROUTE, self.route_bucket(),
+            default=default,
+            allowed=(registry.ROUTE_FUSED, registry.ROUTE_PACKED,
+                     registry.ROUTE_UNPACKED))
+
+    def route_bucket(self):
+        from repro.kernels import registry
+
+        return registry.batch_bucket(
+            self.Bq, registry.shard_bucket(self.P, self.n_local, self.wave))
+
+    def _frontier_program_b(self, L: int, packed: bool) -> Callable:
+        n_local = self.n_local
+        prims = axis_prims(SHARD_AXIS)
+
+        def program(sa_dict, ea_j, cand_j, ids_j):
+            sa = ShardArrays(**sa_dict)
+
+            def job(ea, cand_stack, ids):
+                planes = _seed_frontier_planes(
+                    cand_stack[0], ids, n_local, prims.axis_index())
+                f = pack_bits(planes) if packed else planes
+
+                def hop(fr, cand_r):
+                    if packed:
+                        return frontier_shard_hop(
+                            fr, ea, sa, cand_r, prims), None
+                    return frontier_shard_hop_unpacked(
+                        fr, ea, sa, cand_r, prims), None
+
+                f, _ = jax.lax.scan(hop, f, cand_stack[1:])
+                return f
+
+            return jax.vmap(job)(ea_j, cand_j, ids_j)
+
+        return program
+
+    def _finish_program_b(self, packed: bool, is_cyclic: bool) -> Callable:
+        n_local = self.n_local
+        prims = axis_prims(SHARD_AXIS)
+
+        def finish(f_j, keep_j, ids_j):
+            def job(f, keep, ids):
+                if packed:
+                    planes = jnp.concatenate([
+                        unpack_bits(f[:n_local], ids.shape[0]),
+                        jnp.zeros((1, ids.shape[0]), bool)], axis=0)
+                else:
+                    planes = f
+                survived = _sharded_wave_survivors(
+                    planes, ids, n_local, is_cyclic, prims)
+                return _scatter_keep(keep, survived, ids, n_local,
+                                     prims.axis_index())
+
+            return jax.vmap(job)(f_j, keep_j, ids_j)
+
+        return finish
+
+    def nlcc_phase(self, lane_constraints: Sequence[
+            Tuple[int, NonLocalConstraint]], cstats: Optional[Dict] = None):
+        """Run one lockstep phase of cycle/path constraints — one entry per
+        lane — through job-axis batched wave dispatches. Returns a DEVICE
+        bool (did any lane's omega change); the driver converts it to the
+        phase's single host sync."""
+        from repro.kernels import registry
+
+        omega_before = self.omega_b
+        jobs: List[Tuple[int, Tuple[int, ...]]] = []
+        for lane, c in lane_constraints:
+            if c.is_cyclic:
+                base = c.walk[:-1]
+                walks = [tuple(base[i:] + base[:i]) + (base[i],)
+                         for i in range(len(base))]
+            else:
+                walks = [c.walk, tuple(reversed(c.walk))]
+            jobs.extend((lane, w) for w in walks)
+
+        # ONE stacked head-planes readback sizes every wave loop of the phase
+        head = np.asarray(jnp.stack(
+            [self._omega_column_b(lane, w[0]) for lane, w in jobs]))
+        head_global = head.reshape(len(jobs), -1)[:, :self.part.n]
+
+        groups: Dict[Tuple[int, bool], List[int]] = {}
+        for ji, (lane, w) in enumerate(jobs):
+            groups.setdefault((len(w) - 1, w[0] == w[-1]), []).append(ji)
+
+        keep_cols: Dict[int, jnp.ndarray] = {}
+        n_waves = n_tokens = n_padded = 0
+        for (L, is_cyclic), members in groups.items():
+            route = self._route(L)
+            self._routes_taken.add(route)
+            packed = route in (registry.ROUTE_FUSED, registry.ROUTE_PACKED)
+            J = len(members)
+            lanes = jnp.asarray([jobs[ji][0] for ji in members], jnp.int32)
+            cand_j = jnp.stack(
+                [self._cand_stack_b(*jobs[ji]) for ji in members], axis=1)
+            ea_j = jnp.take(self.ea_b, lanes, axis=1)  # [P, J, P, B]
+            keep_j = jnp.zeros((self.P, J, self.n_local + 1), bool)
+            batches = [list(nlcc_mod.wave_batches(
+                np.flatnonzero(head_global[ji]), self.wave))
+                for ji in members]
+            front = self._fn(("wave_front_b", L, packed, J),
+                             self._frontier_program_b(L, packed), n_sharded=3)
+            finish = self._fn(("wave_finish_b", packed, is_cyclic, J),
+                              self._finish_program_b(packed, is_cyclic),
+                              n_sharded=2)
+            pad_ids = np.full(self.wave, -1, np.int32)
+            n_rounds = max((len(b) for b in batches), default=0)
+            # lockstep wave rounds: a job whose sources ran dry supplies
+            # all-pad ids — inert in seed, survivors, and keep scatter —
+            # so stragglers keep the batch running without exiting it
+            for r in range(n_rounds):
+                ids = np.stack([b[r][0] if r < len(b) else pad_ids
+                                for b in batches])
+                ids_dev = jnp.asarray(ids, jnp.int32)
+                f = front(self.arrs, ea_j, cand_j, ids_dev)
+                keep_j = finish(f, keep_j, ids_dev)
+                n_waves += 1
+                n_tokens += sum(b[r][1] for b in batches if r < len(b))
+                n_padded += sum(1 for b in batches if r >= len(b))
+            for jj, ji in enumerate(members):
+                keep_cols[ji] = keep_j[:, jj]
+
+        # head eliminations (Alg. 5 line 8), per job on its own lane
+        omega = self.omega_b
+        for ji, (lane, w) in enumerate(jobs):
+            q0 = w[0]
+            wd, b = q0 // 32, q0 % 32
+            word = omega[:, lane, :, wd]
+            cleared = word & jnp.uint32(~np.uint32(1 << b))
+            omega = omega.at[:, lane, :, wd].set(
+                jnp.where(keep_cols[ji], word, cleared))
+        self.omega_b = omega
+        if cstats is not None:
+            cstats["nlcc_waves"] = cstats.get("nlcc_waves", 0) + n_waves
+            cstats["nlcc_tokens"] = cstats.get("nlcc_tokens", 0) + n_tokens
+            cstats["nlcc_lockstep_padded"] = (
+                cstats.get("nlcc_lockstep_padded", 0) + n_padded)
+            cstats["nlcc_constraints"] = (
+                cstats.get("nlcc_constraints", 0) + len(lane_constraints))
+            cstats["nlcc_host_syncs"] = cstats.get("nlcc_host_syncs", 0) + 1
+        return jnp.any(omega_before != self.omega_b)
+
+    # -- TDS lane bridge ------------------------------------------------------
+    def tds_lane(self, lane: int, c: NonLocalConstraint,
+                 cstats: Optional[Dict] = None) -> bool:
+        state = self.gather_lane(lane)
+        new = tds_mod.verify_tds_constraint(
+            self.dg, state, c, chunk=self.tds_chunk,
+            max_rows=self.tds_max_rows, stats=cstats,
+            annotate=(c.complete and self.guarantee_precision),
+            dedup=self.work_aggregation)
+        changed = bool(engine_mod._state_changed(state, new))
+        if changed:
+            self.scatter_lane(lane, new)
+        if cstats is not None:
+            cstats["tds_gather_bridge"] = (
+                cstats.get("tds_gather_bridge", 0) + 1)
+        return changed
+
+    def sync(self) -> None:
+        jax.block_until_ready((self.omega_b, self.ea_b))
+
+
+@dataclasses.dataclass
+class BatchedPruneResult:
+    """Per-lane prune results of one batched execution. `results[i]` is a
+    standard PruneResult for templates[i] (backend-free: enumeration over it
+    routes through the local device/host join); `status[i]` is "ok" or
+    "deadline_missed" (a cancelled lane's state is all-zero)."""
+
+    results: List[PruneResult]
+    status: List[str]
+    stats: Dict
+
+    @property
+    def n_lanes(self) -> int:
+        return len(self.results)
+
+
+def prune_batch(
+    graph: Graph,
+    templates: Sequence[Template],
+    *,
+    partition=None,
+    mesh=None,
+    wave: int = 1024,
+    guarantee_precision: bool = True,
+    work_aggregation: bool = True,
+    tds_chunk: int = 4096,
+    tds_max_rows: int = 2_000_000,
+    label_freq: Optional[np.ndarray] = None,
+    deadlines: Optional[Sequence[Optional[float]]] = None,
+    clock: Optional[Callable[[], float]] = None,
+) -> BatchedPruneResult:
+    """Prune B same-bucket templates against one graph in one batched run.
+
+    partition/mesh select the backend exactly as in `prune` — the default
+    (both None) runs the batch on one shard (P=1), the batched analogue of
+    the local backend. `deadlines[i]` is an absolute `clock()` time after
+    which lane i is cancelled at the next phase boundary (masked inert, not
+    a batch abort); clock defaults to time.monotonic.
+    """
+    eng = BatchedEngine(
+        graph, templates, partition=partition, mesh=mesh, wave=wave,
+        tds_chunk=tds_chunk, tds_max_rows=tds_max_rows,
+        work_aggregation=work_aggregation,
+        guarantee_precision=guarantee_precision)
+    from repro.kernels import registry
+
+    if label_freq is None:
+        label_freq = graph.label_frequency()
+    cons = [generate_constraints(t, label_freq=label_freq,
+                                 guarantee_precision=guarantee_precision)
+            for t in templates]
+    if deadlines is not None and len(deadlines) != len(templates):
+        raise ValueError("deadlines must align with templates")
+    clock = clock or time.monotonic
+    status = [STATUS_OK] * eng.Bq
+    stats: Dict = {
+        "n_constraints": [len(c) for c in cons],
+        "batched": {
+            "B": eng.Bq, "P": eng.P, "backend": eng.name,
+            "bucket": registry.bucket_key(eng.route_bucket()),
+        },
+    }
+
+    def cancel_expired():
+        if deadlines is None:
+            return
+        now = clock()
+        for i, dl in enumerate(deadlines):
+            if dl is not None and status[i] == STATUS_OK and now > dl:
+                status[i] = STATUS_DEADLINE_MISSED
+                eng.cancel_lane(i)
+                stats["deadline_cancelled"] = (
+                    stats.get("deadline_cancelled", 0) + 1)
+
+    t0 = time.perf_counter()
+    eng.init()
+    cancel_expired()
+    eng.lcc(stats)
+    for k in range(max((len(c) for c in cons), default=0)):
+        cancel_expired()
+        wave_lanes = []
+        tds_lanes = []
+        for i, cs in enumerate(cons):
+            if status[i] != STATUS_OK or k >= len(cs):
+                continue
+            c = cs[k]
+            (wave_lanes if c.kind in ("cycle", "path")
+             else tds_lanes).append((i, c))
+        changed_dev = eng.nlcc_phase(wave_lanes, stats) if wave_lanes else None
+        # the phase's ONE host sync: did any lane change?
+        changed = bool(changed_dev) if changed_dev is not None else False
+        for i, c in tds_lanes:  # host-bridged row joins (as in every backend)
+            changed = eng.tds_lane(i, c, stats) or changed
+        if changed:
+            # joint re-run: lanes the phase left unchanged sit at LCC
+            # fixpoint, so the sweep is a bit-exact no-op for them
+            eng.lcc(stats)
+    eng.sync()
+    stats["batched"]["seconds"] = time.perf_counter() - t0
+    stats["dispatch_routes"] = {
+        nlcc_mod.NLCC_ROUTE: ("+".join(sorted(eng._routes_taken))
+                              if eng._routes_taken else "none")}
+
+    results = []
+    for i, t in enumerate(templates):
+        state = eng.gather_lane(i)
+        results.append(PruneResult(
+            state=state, template=t, dg=eng.dg, phases=[],
+            stats=dict(stats, lane=i, lane_status=status[i])))
+    return BatchedPruneResult(results=results, status=status, stats=stats)

@@ -214,26 +214,46 @@ def _cols_program(axis_name: Optional[str], qs: Tuple[int, ...], n_local: int,
 # to their next owners in pow2-padded buckets sized by host-readable counts.
 # The once-per-join candidacy-column all-gather (`_cols_program`) stays the
 # only replicated state.
-def _owner_counts(vals, ok, n_local: int, P: int) -> jnp.ndarray:
-    """int32[P] rows per next-owner shard (pads/drops excluded) — the bucket
-    sizes of the next `exchange_rows`, read back by the host."""
+def _owner_stats(vals, ok, deg, n_local: int, P: int) -> jnp.ndarray:
+    """int32[2, P] per next-owner shard: surviving-row counts (the bucket
+    sizes of the next `exchange_rows`) AND the summed degree of the next
+    frontier column (the next expansion's slot capacity). Both ride one
+    handshake readback — the capacity half is what lets the NEXT step skip
+    its own frontier-column readback entirely."""
     owner = jnp.where(ok, vals // n_local, P).astype(jnp.int32)
-    oh = owner[:, None] == jnp.arange(P, dtype=jnp.int32)[None, :]
-    return jnp.sum(oh.astype(jnp.int32), axis=0)
+    oh = (owner[:, None] == jnp.arange(P, dtype=jnp.int32)[None, :]
+          ).astype(jnp.int32)
+    dw = jnp.take(deg, jnp.where(ok, vals, 0)) * ok.astype(jnp.int32)
+    return jnp.stack([jnp.sum(oh, axis=0), jnp.sum(oh * dw[:, None], axis=0)])
 
 
 def _rowshard_expand_program(axis_name: Optional[str], step: JoinStep,
-                             n_local: int, P: int, oc: Optional[int]):
+                             n_local: int, P: int, oc: Optional[int],
+                             Tb: int):
     """One expansion step over the OWNED row block: by the ownership
     invariant every real row's frontier vertex is shard-local, so the CSR
-    read needs no collective at all. Returns per-slot (vertex, keep) plus
-    the next-owner bucket counts (`oc` = next frontier column in the widened
-    row layout; None on the walk's last step, where the count is scalar)."""
+    read needs no collective at all. The slot layout (parent row, arc j) is
+    computed ON DEVICE from the static degree table — an exact mirror of
+    `tds.slot_parents`, so the row sets stay bit-identical to the replicated
+    engine — sized by `Tb`, the pow2 capacity the PREVIOUS step's folded
+    handshake reported. Returns per-slot (vertex, keep, parent) plus the
+    next-owner (count, capacity) matrix (`oc` = next frontier column in the
+    widened row layout; None on the walk's last step, where the count is
+    scalar)."""
 
-    def program(plan, arc_active, rows, parent, j, cand_col, deg):
+    def program(plan, arc_active, rows, cand_col, deg):
         prims = _prims(axis_name)
         p = prims.axis_index()
         A = plan["arc_dst"].shape[0]
+        Rb = rows.shape[0]
+        # device slot layout (mirror of tds.slot_parents: padding slots land
+        # on the last row with j >= its degree, so every filter rejects them)
+        degrow = jnp.take(deg, rows[:, step.c_prev])  # sink rows -> 0
+        cum = jnp.cumsum(degrow)
+        t = jnp.arange(Tb, dtype=jnp.int32)
+        parent = jnp.minimum(
+            jnp.searchsorted(cum, t, side="right"), Rb - 1).astype(jnp.int32)
+        j = t - jnp.take(cum - degrow, parent)
         up = jnp.take(rows[:, step.c_prev], parent)  # frontier vertex, local
         u_lo = jnp.clip(up - p * n_local, 0, n_local)  # sink rows -> pad row
         start = jnp.take(plan["csr_off"], u_lo)
@@ -248,11 +268,11 @@ def _rowshard_expand_program(axis_name: Optional[str], step: JoinStep,
             ok &= (v > ref) if op == "gt" else (v < ref)
         vi = jnp.where(ok, v, 0).astype(jnp.int32)
         if oc is None:
-            cnt = jnp.sum(ok.astype(jnp.int32))[None]
+            cm = jnp.sum(ok.astype(jnp.int32))[None]
         else:
             nf = vi if oc == step.n_cols else jnp.take(rows[:, oc], parent)
-            cnt = _owner_counts(nf, ok, n_local, P)
-        return vi, ok, cnt
+            cm = _owner_stats(nf, ok, deg, n_local, P)
+        return vi, ok, parent, cm
 
     return program
 
@@ -283,10 +303,10 @@ def _rowshard_revisit_program(axis_name: Optional[str], step: JoinStep,
         found = (lo < lo0 + dv) & (jnp.take(plan["arc_dst"], li) == v)
         keep = found & jnp.take(arc_active, li)
         if oc is None:
-            cnt = jnp.sum(keep.astype(jnp.int32))[None]
+            cm = jnp.sum(keep.astype(jnp.int32))[None]
         else:
-            cnt = _owner_counts(rows[:, oc], keep, n_local, P)
-        return keep, cnt
+            cm = _owner_stats(rows[:, oc], keep, deg, n_local, P)
+        return keep, cm
 
     return program
 
@@ -623,13 +643,18 @@ class ShardedRowBlock:
     """The distributed row table: device data [P, Rb, C] (per-shard pow2
     blocks, rows past a shard's count are inert sink rows) + host per-shard
     counts. Peak per-shard resident rows = Rb = pow2(max_p k_p) — for a
-    balanced frontier ~1/P of the replicated table's height."""
+    balanced frontier ~1/P of the replicated table's height. `cap` carries
+    the per-shard expansion capacity of the NEXT step's frontier column
+    (summed static degrees), read back in the SAME handshake that sized this
+    block — so the next expand step never re-reads the frontier column."""
 
-    __slots__ = ("data", "counts")
+    __slots__ = ("data", "counts", "cap")
 
-    def __init__(self, data, counts: np.ndarray):
+    def __init__(self, data, counts: np.ndarray, cap=None):
         self.data = data
         self.counts = np.asarray(counts, np.int64)
+        self.cap = (np.zeros(self.counts.shape[0], np.int64)
+                    if cap is None else np.asarray(cap, np.int64))
 
     @property
     def k(self) -> int:
@@ -641,11 +666,14 @@ class RowShardedJoin:
 
     Invariant: every real row lives on the shard owning its NEXT frontier
     vertex (RowPlan's block rule), so each step's CSR expansion / revisit
-    probe is purely shard-local. Per step the host reads ONE [P, P] (or
-    [P, 1]) count matrix to size static bucket shapes, then one
-    `exchange_rows` routes survivors to their next owners. Slot layout comes
-    from the same static degrees as the replicated engine
-    (`tds.expansion_slots`), so counts and row SETS are bit-identical to
+    probe is purely shard-local. Per step the host performs exactly ONE
+    readback — a folded [2, P, P] (or [1, P] on the tail) handshake carrying
+    both the next-owner bucket counts (sizing `exchange_rows`) AND the
+    next frontier column's expansion capacity (sizing the NEXT step's slot
+    layout), so the old separate frontier-column readback is gone: one host
+    sync per step instead of two. Slot layout is computed on device from the
+    same static degrees as the replicated engine (an exact mirror of
+    `tds.slot_parents`), so counts and row SETS are bit-identical to
     `DeviceJoin` / `HostJoin` on any shard count — only placement (and
     therefore emission order, erased by the caller's np.unique) differs.
     The candidacy-column all-gather (`ctx.cols`) is the only replicated
@@ -674,6 +702,7 @@ class RowShardedJoin:
         self.n_pad = ctx.n_pad
         self.rp = ctx.row_plan
         self._rv_iters = max(int(np.ceil(np.log2(max(ctx.A, 2)))) + 1, 1)
+        self._deg_max = int(self.rp.deg.max()) if self.rp.deg.size else 0
 
     # -- step metadata ------------------------------------------------------
     def _next_owner_col(self, r: int) -> Optional[int]:
@@ -701,7 +730,11 @@ class RowShardedJoin:
                          owner_col: int) -> ShardedRowBlock:
         data, counts = self.rp.shard_rows(rows_np, owner_col, _pow2)
         self._record_block(counts, data.shape[1])
-        return ShardedRowBlock(jnp.asarray(data), counts)
+        fcol = rows_np[:, owner_col]  # host rows are real vertices
+        cap = np.bincount(fcol // self.n_local,
+                          weights=self.rp.deg[fcol].astype(np.float64),
+                          minlength=self.P).astype(np.int64)
+        return ShardedRowBlock(jnp.asarray(data), counts, cap)
 
     # -- engine API ---------------------------------------------------------
     def sources(self) -> np.ndarray:
@@ -729,53 +762,63 @@ class RowShardedJoin:
         expand = s.kind == "expand"
         width = s.n_cols + (1 if expand else 0)
         if expand:
-            # host capacity math from the STATIC degree table — identical to
-            # the replicated engine's layout, summed over shards
-            fcol = np.asarray(rows.data[:, :, s.c_prev])  # [P, Rb]
-            deg_sh = self.rp.deg[fcol]  # int64; sink rows -> 0
-            cums = [tds_mod.expansion_slots(d) for d in deg_sh]
-            t_p = np.asarray([t for _, t in cums], np.int64)
-            T = int(t_p.sum())
+            # slot capacity came back in the PREVIOUS step's folded
+            # handshake (or the host sharding for seeds/splits) — no
+            # frontier-column readback here
+            cap_p = rows.cap
+            T = int(cap_p.sum())
             if enforce and T > self.max_rows:
                 raise TdsOverflow(
                     f"join capacity {T} > max_rows={self.max_rows} "
                     f"at step {r}")
-            _guard_int32(int(t_p.max()) if t_p.size else 0,
+            _guard_int32(int(cap_p.max()) if cap_p.size else 0,
                          f"per-shard join expansion capacity at step {r}")
             if T == 0:
                 return self._empty(width)
-            Tb = _pow2(max(int(t_p.max()), 1))
-            par = np.empty((self.P, Tb), np.int32)
-            jj = np.empty((self.P, Tb), np.int32)
-            for p in range(self.P):
-                par[p], jj[p] = tds_mod.slot_parents(
-                    cums[p][0], deg_sh[p], Tb)
+            if oc is not None:
+                # the NEXT capacity is summed on device in int32; bound it
+                # conservatively before it can wrap (slots * max degree)
+                _guard_int32(int(cap_p.max()) * max(self._deg_max, 1),
+                             f"device capacity partial sums at step {r}")
+            Tb = _pow2(max(int(cap_p.max()), 1))
             fn = self.ctx.wrap_rows(
-                ("rsj_ex",) + s.key() + (oc,),
+                ("rsj_ex",) + s.key() + (oc, Tb),
                 lambda axis: _rowshard_expand_program(
-                    axis, s, self.n_local, self.P, oc),
-                n_sharded=5,
+                    axis, s, self.n_local, self.P, oc, Tb),
+                n_sharded=3,
             )
-            par_dev = jnp.asarray(par)
-            newv, ok, cnt = fn(self.ctx.plan, self.ctx.arc_active, rows.data,
-                               par_dev, jnp.asarray(jj),
-                               self.cand[s.c_tgt], self.ctx.deg)
+            newv, ok, parent, cm = fn(self.ctx.plan, self.ctx.arc_active,
+                                      rows.data, self.cand[s.c_tgt],
+                                      self.ctx.deg)
             if self.stats is not None:
                 self.stats["join_expansions"] = (
                     self.stats.get("join_expansions", 0) + T)
-            args = (rows.data, par_dev, newv, ok)
+            args = (rows.data, parent, newv, ok)
         else:
+            if oc is not None:
+                _guard_int32(int(rows.counts.max()) * max(self._deg_max, 1),
+                             f"device capacity partial sums at step {r}")
             fn = self.ctx.wrap_rows(
                 ("rsj_rv",) + s.key() + (oc,),
                 lambda axis: _rowshard_revisit_program(
                     axis, s, self.n_local, self._rv_iters, self.P, oc),
                 n_sharded=3,
             )
-            ok, cnt = fn(self.ctx.plan, self.ctx.arc_active, rows.data,
-                         self.ctx.deg)
+            ok, cm = fn(self.ctx.plan, self.ctx.arc_active, rows.data,
+                        self.ctx.deg)
             args = (rows.data, ok)
 
-        cnt = np.asarray(cnt, np.int64)  # [P, P] (or [P, 1] on the tail)
+        # the ONE host sync of this step: counts + next-capacity together
+        cm = np.asarray(cm, np.int64)  # [P, 2, P] ([P, 1] on the tail)
+        if self.stats is not None:
+            self.stats["rowshard_host_syncs"] = (
+                self.stats.get("rowshard_host_syncs", 0) + 1)
+        if oc is None:
+            cnt = cm  # [P, 1] per-shard survivor counts
+            cap_next = None
+        else:
+            cnt = cm[:, 0, :]  # [P, P] sender-by-owner counts
+            cap_next = cm[:, 1, :].sum(axis=0)  # [P] per-owner capacity
         k_total = int(cnt.sum())
         if enforce and k_total > self.max_rows:
             raise TdsOverflow(
@@ -810,7 +853,7 @@ class RowShardedJoin:
             n_sharded=len(args),
         )
         out = ShardedRowBlock(route_fn(*args, jnp.asarray(cnt, jnp.int32)),
-                              k_in)
+                              k_in, cap_next)
         self._record_block(k_in, Rb2)
         if self.stats is not None:
             off_shard = k_total - int(np.trace(cnt))

@@ -160,6 +160,19 @@ def shard_bucket(P: int, *dims: int) -> Tuple:
     return (f"p{int(P)}",) + shape_bucket(*dims)
 
 
+def batch_bucket(B: int, bucket) -> Tuple:
+    """Template-batched variant of an existing bucket: a leading ``b<B>``
+    segment (power-of-two rounded batch size) so batched routes tune
+    separately from single-query ones — renders as e.g. ``b8x2048x1024``.
+    Lookups for batch size 1 (``b1x...``) fall back to the unbatched key
+    (`DispatchPolicy._lookup`), so a pre-batching policy cache keeps
+    resolving without re-tuning."""
+    b = shape_bucket(B)[0]
+    if bucket == BUCKET_ANY:
+        return (f"b{b}",)
+    return (f"b{b}",) + tuple(bucket)
+
+
 def bucket_key(bucket) -> str:
     """Render a shape bucket the way policy-table keys spell it ("2048x32",
     "*", "scalar") — for reading measurements back out of a policy."""
@@ -215,6 +228,13 @@ class DispatchPolicy:
     # -- lookup
     def _lookup(self, table: Dict[str, PolicyEntry], name, backend, bucket):
         entry = table.get(_entry_key(name, backend, bucket))
+        if (entry is None and isinstance(bucket, tuple)
+                and bucket[:1] == ("b1",)):
+            # batch-size-1 forward-compat: a pre-batching cache has no
+            # ``b1`` entries, but its unbatched decision is exactly the
+            # B=1 decision — resolve it before falling to the wildcard
+            unbatched = bucket[1:] if len(bucket) > 1 else BUCKET_ANY
+            entry = table.get(_entry_key(name, backend, unbatched))
         if entry is None and bucket != BUCKET_ANY:
             entry = table.get(_entry_key(name, backend, BUCKET_ANY))
         return entry
@@ -519,7 +539,10 @@ def tune(
             is timed as-is; the fastest candidate becomes the route decision
             (e.g. "packed"/"unpacked" prune routing).
     repeat  timing repeats per candidate (best-of, after a warmup run).
-    policy  extend this policy instead of starting fresh.
+    policy  extend this policy instead of starting fresh; when omitted, an
+            existing readable cache at the target path is loaded and
+            extended — tune() never invalidates decisions it didn't re-measure
+            (an unreadable/stale-schema cache is still replaced).
     path/persist  where (and whether) to save the JSON cache; the tuned
             policy is installed as the active one either way.
 
@@ -527,7 +550,16 @@ def tune(
     unrunnable (inf) rather than aborting the tune.
     """
     be = backend or jax.default_backend()
-    pol = policy if policy is not None else DispatchPolicy()
+    pol = policy
+    if pol is None:
+        target = path or policy_path()
+        if os.path.exists(target):
+            try:
+                pol = DispatchPolicy.load(target)
+            except (ValueError, KeyError, json.JSONDecodeError, OSError):
+                pol = None  # unreadable cache: tune from scratch, overwrite
+    if pol is None:
+        pol = DispatchPolicy()
     pol.meta.update({
         "backend": be,
         "jax": jax.__version__,

@@ -1,13 +1,18 @@
-"""Serving entry point: batched greedy generation (LM) or catalog scoring
-(recsys) on the smoke configs.
+"""Serving entry point: graph-query serving (the paper's multi-tenant
+pattern-matching scenario), batched greedy generation (LM), or catalog
+scoring (recsys) on the smoke configs.
 
+  PYTHONPATH=src python -m repro.launch.serve --graph-queries 32 \
+      --graph-scale 9 --max-batch 8
   PYTHONPATH=src python -m repro.launch.serve --arch starcoder2-15b \
       --batch 4 --prompt-len 16 --max-new 32
 
-Kernel calls in the serving hot loop (attention, embedding_bag) route through
-the dispatch registry; `--policy` loads a tuned dispatch-policy cache (from
-`registry.tune()` / `python -m benchmarks.run`) so serving uses the measured
-kernel-mode decisions for this host instead of the untuned fallback.
+Kernel calls in the serving hot loop (batched prune waves, attention,
+embedding_bag) route through the dispatch registry; `--policy` loads a tuned
+dispatch-policy cache (from `registry.tune()` / `python -m benchmarks.run`)
+so serving uses the measured kernel-mode decisions for this host instead of
+the untuned fallback — graph serving resolves batched routes under
+b<B>-prefixed bucket keys.
 """
 from __future__ import annotations
 
@@ -27,10 +32,25 @@ from repro.data import MaskedSequenceStream
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--arch", choices=ARCH_IDS,
+                    help="LM/recsys smoke-config serving (mutually "
+                         "exclusive with --graph-queries)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--graph-queries", type=int, default=0, metavar="N",
+                    help="serve N template queries against a synthetic "
+                         "metadata graph through the batched prune engine")
+    ap.add_argument("--graph-scale", type=int, default=9,
+                    help="rmat graph scale (2^scale vertices)")
+    ap.add_argument("--partition", type=int, default=None,
+                    help="shard the background graph P ways")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-wait", type=float, default=0.05,
+                    help="batcher max wait (seconds) before launching a "
+                         "partial batch")
+    ap.add_argument("--timeout", type=float, default=None,
+                    help="per-query serving deadline in seconds")
     ap.add_argument("--policy", default=None, metavar="PATH",
                     help="dispatch-policy cache to serve under "
                          "(default: the registry's lazy policy_path() load)")
@@ -40,6 +60,12 @@ def main():
         registry.set_policy(registry.DispatchPolicy.load(args.policy))
         print(f"dispatch policy: {args.policy} "
               f"({len(registry.get_policy().modes)} tuned kernel modes)")
+
+    if args.graph_queries:
+        _serve_graph(args)
+        return
+    if not args.arch:
+        raise SystemExit("pass --arch (LM/recsys) or --graph-queries N")
 
     cfg = get_arch(args.arch).smoke()
     if isinstance(cfg, LMConfig):
@@ -64,6 +90,37 @@ def main():
               f"top-10 for user 0: {top[0]}")
     else:
         raise SystemExit("GNN archs serve through examples/pattern_gnn.py")
+
+
+def _serve_graph(args):
+    from repro.graph import rmat_graph
+    from repro.serve import GraphQueryEngine, example_workload, MODE_COUNT
+
+    g = rmat_graph(args.graph_scale, edge_factor=8, seed=5)
+    print(f"background graph: n={g.n} m={g.m} "
+          f"(rmat scale {args.graph_scale})")
+    eng = GraphQueryEngine(
+        g, partition=args.partition, max_batch=args.max_batch,
+        max_wait_s=args.max_wait)
+    templates = example_workload(args.graph_queries, seed=1,
+                                 labels_max=int(g.labels.max()))
+    t0 = time.perf_counter()
+    ids = [eng.submit(t, mode=MODE_COUNT, timeout_s=args.timeout)
+           for t in templates]
+    results = eng.drain()
+    dt = time.perf_counter() - t0
+    assert len(results) == len(ids)
+    ok = [r for r in results if r.status == "ok"]
+    missed = len(results) - len(ok)
+    print(f"served {len(results)} queries in {dt:.2f}s "
+          f"({len(results) / dt:.1f} q/s) across "
+          f"{eng.stats['n_batches']} batches; deadline_missed={missed}")
+    for b in eng.stats["batches"]:
+        print(f"  batch {b['batch_id']}: B={b['B']} bucket={b['bucket']} "
+              f"{b['seconds']:.2f}s")
+    for r in ok[:4]:
+        print(f"  query {r.query_id}: {r.n_embeddings} matches "
+              f"(batch {r.batch_id}, waited {r.wait_s * 1e3:.0f}ms)")
 
 
 if __name__ == "__main__":

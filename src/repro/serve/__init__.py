@@ -1,3 +1,7 @@
 from repro.serve.engine import (  # noqa: F401
     build_decode_step, build_prefill, build_recsys_scorer, greedy_generate,
 )
+from repro.serve.graph_query import (  # noqa: F401
+    GraphQueryEngine, GraphQuery, QueryResult, example_workload,
+    MODE_PRUNE, MODE_COUNT, MODE_STREAM,
+)

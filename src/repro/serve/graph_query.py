@@ -1,0 +1,270 @@
+"""Graph-query serving: admission, shape-bucket batching, deadlines,
+streamed emission — the multi-tenant front end of `prune_batch`.
+
+The production shape this models: ONE resident background metadata graph,
+MANY analysts submitting search templates. Queries enter an admission queue;
+a shape-bucket batcher groups compatible queries (same pow2 template bucket)
+and launches a template-batched prune — one kernel-dispatch sequence for the
+whole batch (core/batch.py) — when either the batch is full (`max_batch`) or
+the oldest compatible query has waited `max_wait_s`. Per-query deadlines
+cancel by masking: a query whose deadline passes while queued is emitted as
+deadline_missed without consuming device time; one that expires mid-batch is
+zeroed at the next phase boundary inside the batched run (never a batch
+abort). Matches stream out through `stream_matches` block by block, so the
+whole result table never materializes.
+
+The structure follows the jitted-step + host-driver split of the LM decode
+loop in serve/engine.py: everything device-side lives in BatchedEngine's
+jitted programs; this module is the host driver — queueing, batching,
+deadlines, emission — and owns no device state of its own.
+
+Routing is policy-cache-driven at startup: pass `policy=` (a path or a
+DispatchPolicy) and every batched prune resolves its kernel routes through
+the tuned cache under BATCHED bucket keys (`b8xp4x...`), falling back to
+unbatched entries for batch-size-1 lookups.
+
+Deliberately synchronous and single-threaded: `submit()` enqueues, `pump()`
+launches every due batch, `drain()` runs the queue dry. Determinism is the
+point — the serving tests and the multi_tenant benchmark drive the engine
+with a fake clock and assert exact admission/batching decisions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.graph.structs import Graph
+from repro.core.template import Template
+from repro.core.batch import (prune_batch, BatchedPruneResult,
+                              STATUS_OK, STATUS_DEADLINE_MISSED)
+from repro.core.enumerate import count_matches, stream_matches
+from repro.core.pipeline import PruneResult
+
+MODE_PRUNE = "prune"    # deliver the pruned solution subgraph only
+MODE_COUNT = "count"    # also count matches (symmetry-broken)
+MODE_STREAM = "stream"  # prune now, caller pulls embedding blocks later
+
+
+@dataclasses.dataclass
+class GraphQuery:
+    """One admitted query: a template plus its serving metadata."""
+    query_id: int
+    template: Template
+    mode: str
+    deadline: Optional[float]  # absolute clock() time, None = no deadline
+    submitted_at: float
+    bucket: tuple
+
+
+@dataclasses.dataclass
+class QueryResult:
+    query_id: int
+    status: str  # STATUS_OK | STATUS_DEADLINE_MISSED
+    mode: str
+    result: Optional[PruneResult]  # None for queries cancelled while queued
+    n_embeddings: Optional[int]  # filled for MODE_COUNT ok queries
+    batch_id: Optional[int]  # None if never launched
+    batch_size: int
+    wait_s: float
+    seconds: float  # batched prune wall time (shared by the batch)
+
+
+class GraphQueryEngine:
+    """The serving front end: one resident graph, a queue of template
+    queries, shape-bucketed batched execution."""
+
+    def __init__(self, graph: Graph, *, partition=None, mesh=None,
+                 wave: int = 1024, max_batch: int = 8,
+                 max_wait_s: float = 0.05,
+                 policy: Union[None, str, "object"] = None,
+                 clock=time.monotonic, **prune_kw):
+        from repro.kernels import registry
+
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self.graph = graph
+        self.partition = partition
+        self.mesh = mesh
+        self.wave = wave
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.clock = clock
+        self.prune_kw = prune_kw
+        self._label_freq = graph.label_frequency()
+        self._queue: deque = deque()
+        self._done: Dict[int, QueryResult] = {}
+        self._ids = itertools.count()
+        self._batch_ids = itertools.count()
+        self.stats: Dict = {"n_submitted": 0, "n_batches": 0,
+                            "n_completed": 0, "n_deadline_missed": 0}
+        if policy is not None:  # tuned kernel-mode decisions from startup on
+            if isinstance(policy, (str, bytes)):
+                policy = registry.DispatchPolicy.load(policy)
+            registry.set_policy(policy)
+            self.stats["policy_active"] = True
+
+    # ------------------------------------------------------------- admission
+    def submit(self, template: Template, *, mode: str = MODE_COUNT,
+               timeout_s: Optional[float] = None) -> int:
+        """Admit one query; returns its query_id. `timeout_s` is a serving
+        deadline relative to now — a query that cannot finish by then is
+        cancelled (masked), never silently dropped."""
+        from repro.kernels import registry
+
+        if mode not in (MODE_PRUNE, MODE_COUNT, MODE_STREAM):
+            raise ValueError(f"unknown query mode {mode!r}")
+        if template.n0 < 2:
+            raise ValueError("single-vertex templates are a label filter, "
+                             "not a pattern query")
+        now = self.clock()
+        q = GraphQuery(
+            query_id=next(self._ids), template=template, mode=mode,
+            deadline=(now + timeout_s) if timeout_s is not None else None,
+            submitted_at=now, bucket=registry.shape_bucket(template.n0))
+        self._queue.append(q)
+        self.stats["n_submitted"] += 1
+        return q.query_id
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._queue)
+
+    def result(self, query_id: int) -> Optional[QueryResult]:
+        return self._done.get(query_id)
+
+    # ------------------------------------------------------------- batching
+    def _expire_queued(self) -> List[QueryResult]:
+        now = self.clock()
+        live = deque()
+        expired = []
+        for q in self._queue:
+            if q.deadline is not None and now > q.deadline:
+                expired.append(self._finish_cancelled(q))
+            else:
+                live.append(q)
+        self._queue = live
+        return expired
+
+    def _ready_bucket(self, force: bool):
+        """The shape-bucket batcher's launch decision: a bucket is due when
+        it holds max_batch queries or its oldest query has waited
+        max_wait_s (or the caller is draining)."""
+        now = self.clock()
+        groups: Dict[tuple, List[GraphQuery]] = {}
+        for q in self._queue:  # FIFO within a bucket by construction
+            groups.setdefault(q.bucket, []).append(q)
+        for bucket, qs in groups.items():
+            full = len(qs) >= self.max_batch
+            overdue = (now - qs[0].submitted_at) >= self.max_wait_s
+            if full or overdue or force:
+                return bucket, qs[:self.max_batch]
+        return None
+
+    def pump(self, *, force: bool = False) -> List[QueryResult]:
+        """Launch every due batch; returns the results it completed. With
+        force=True, waiting policies are bypassed (drain semantics)."""
+        out: List[QueryResult] = []
+        while True:
+            out.extend(self._expire_queued())
+            due = self._ready_bucket(force)
+            if due is None:
+                break
+            _, batch = due
+            for q in batch:
+                self._queue.remove(q)
+            out.extend(self._execute(batch))
+        return out
+
+    def drain(self) -> List[QueryResult]:
+        """Run the queue dry (no max-wait idling); returns all results."""
+        out: List[QueryResult] = []
+        while self._queue:
+            out.extend(self.pump(force=True))
+        return out
+
+    # ------------------------------------------------------------- execution
+    def _execute(self, batch: Sequence[GraphQuery]) -> List[QueryResult]:
+        batch_id = next(self._batch_ids)
+        now = self.clock()
+        bres: BatchedPruneResult = prune_batch(
+            self.graph, [q.template for q in batch],
+            partition=self.partition, mesh=self.mesh, wave=self.wave,
+            label_freq=self._label_freq,
+            deadlines=[q.deadline for q in batch], clock=self.clock,
+            **self.prune_kw)
+        seconds = bres.stats["batched"]["seconds"]
+        self.stats["n_batches"] += 1
+        self.stats.setdefault("batches", []).append({
+            "batch_id": batch_id, "B": len(batch),
+            "bucket": bres.stats["batched"]["bucket"], "seconds": seconds})
+        out = []
+        for q, lane_res, status in zip(batch, bres.results, bres.status):
+            n_emb = None
+            if status == STATUS_OK and q.mode == MODE_COUNT:
+                n_emb = int(count_matches(
+                    lane_res.dg, lane_res.state, q.template,
+                    label_freq=self._label_freq).n_embeddings)
+            qr = QueryResult(
+                query_id=q.query_id, status=status, mode=q.mode,
+                result=lane_res if status == STATUS_OK else None,
+                n_embeddings=n_emb, batch_id=batch_id,
+                batch_size=len(batch), wait_s=now - q.submitted_at,
+                seconds=seconds)
+            self._finish(qr)
+            out.append(qr)
+        return out
+
+    def _finish_cancelled(self, q: GraphQuery) -> QueryResult:
+        qr = QueryResult(
+            query_id=q.query_id, status=STATUS_DEADLINE_MISSED, mode=q.mode,
+            result=None, n_embeddings=None, batch_id=None, batch_size=0,
+            wait_s=self.clock() - q.submitted_at, seconds=0.0)
+        self._finish(qr)
+        return qr
+
+    def _finish(self, qr: QueryResult) -> None:
+        self._done[qr.query_id] = qr
+        if qr.status == STATUS_DEADLINE_MISSED:
+            self.stats["n_deadline_missed"] += 1
+        else:
+            self.stats["n_completed"] += 1
+
+    # ------------------------------------------------------------- emission
+    def stream(self, query_id: int, *, chunk: int = 4096,
+               max_rows: int = 1_000_000) -> Iterator[np.ndarray]:
+        """Stream a completed query's embeddings block by block
+        (`stream_matches` over the lane's pruned subgraph — bounded memory,
+        the full row table never exists at once). A deadline-missed query
+        streams nothing."""
+        qr = self._done.get(query_id)
+        if qr is None:
+            raise KeyError(f"query {query_id} has no result yet")
+        if qr.status != STATUS_OK:
+            return iter(())
+        return stream_matches(qr.result, label_freq=self._label_freq,
+                              chunk=chunk, max_rows=max_rows)
+
+
+def example_workload(n: int, seed: int = 0,
+                     labels_max: int = 7) -> List[Template]:
+    """A mixed cyclic/path/counted template workload (all in the pow2-4
+    shape bucket) for demos, benchmarks, and serving tests."""
+    shapes = [
+        ([0, 1, 2, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),  # square
+        ([0, 1, 2, 3], [(0, 1), (1, 2), (2, 3)]),          # path
+        ([0, 1, 2], [(0, 1), (1, 2), (2, 0)]),             # triangle
+        ([0, 0, 1], [(0, 1), (1, 2), (2, 0)]),             # counted triangle
+    ]
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        labels, edges = shapes[i % len(shapes)]
+        base = int(rng.integers(0, max(labels_max - 3, 1)))
+        out.append(Template([min(base + l, labels_max) for l in labels],
+                            edges))
+    return out

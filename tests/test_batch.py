@@ -1,0 +1,153 @@
+"""Template-batched execution (core/batch.py): bit-parity, stragglers,
+deadlines.
+
+The contract under test: stacking B same-bucket templates along the lane
+axis and running them through shared dispatches produces, for every lane,
+final omega / edge masks / match counts BIT-IDENTICAL to running that
+template alone through `prune` on the same backend — including lanes that
+converge in one wave round while a batchmate needs several (masked, not
+exited), and lanes cancelled by a deadline (masked, not a batch abort).
+"""
+import numpy as np
+import pytest
+
+from repro.graph import rmat_graph
+from repro.core import (Template, prune, prune_batch, count_matches,
+                        BatchedPruneResult)
+from repro.core.batch import STATUS_DEADLINE_MISSED, STATUS_OK
+
+
+def _graph():
+    return rmat_graph(8, edge_factor=6, seed=3)
+
+
+# same pow2 shape bucket (n0 in {3, 4} -> 4); mixed cyclic / path / counted
+def _variants():
+    return [
+        Template([5, 4, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),  # square
+        Template([5, 4, 3, 2], [(0, 1), (1, 2), (2, 3)]),          # path
+        Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)]),             # triangle
+        Template([6, 5, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+        Template([3, 2, 2, 2], [(0, 1), (1, 2), (2, 3)]),
+        Template([5, 5, 4], [(0, 1), (1, 2), (2, 0)]),    # repeated label
+        Template([4, 4, 3, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+        Template([6, 4, 2], [(0, 1), (1, 2), (2, 0)]),
+    ]
+
+
+def _assert_lane_parity(bres, templates, g, *, partition=None, **kw):
+    assert isinstance(bres, BatchedPruneResult)
+    assert bres.n_lanes == len(templates)
+    for i, t in enumerate(templates):
+        seq = prune(g, t, partition=partition, **kw)
+        bl = bres.results[i]
+        np.testing.assert_array_equal(
+            np.asarray(bl.state.omega), np.asarray(seq.state.omega),
+            err_msg=f"lane {i}: omega differs from sequential prune")
+        np.testing.assert_array_equal(
+            np.asarray(bl.state.edge_active),
+            np.asarray(seq.state.edge_active),
+            err_msg=f"lane {i}: edge mask differs from sequential prune")
+        cb = count_matches(bl.dg, bl.state, t)
+        cs = count_matches(seq.dg, seq.state, t)
+        assert cb.n_embeddings == cs.n_embeddings, f"lane {i}: match counts"
+
+
+@pytest.mark.parametrize("B", [1, 2, 8])
+def test_batched_parity_local(B):
+    """Batched B queries == B sequential prunes, bit for bit (P=1 — the
+    batched analogue of the local backend)."""
+    g = _graph()
+    templates = _variants()[:B]
+    bres = prune_batch(g, templates)
+    _assert_lane_parity(bres, templates, g, partition=None)
+    assert bres.stats["batched"]["B"] == B
+    assert bres.stats["batched"]["bucket"].startswith(
+        f"b{1 << (B - 1).bit_length() if B > 1 else 1}x")
+
+
+def test_batched_parity_sharded():
+    """Same contract composed with the shard axis (sim P=4)."""
+    g = _graph()
+    templates = [_variants()[0], _variants()[1], _variants()[2]]
+    bres = prune_batch(g, templates, partition=4)
+    _assert_lane_parity(bres, templates, g, partition=4)
+    assert bres.stats["batched"]["P"] == 4
+
+
+def test_straggler_masking():
+    """One lane's wave sources run dry in round 1 while a batchmate needs
+    several rounds: the exhausted lane rides pad (-1) waves — pinned by the
+    lockstep-padded counter — and parity still holds for both."""
+    g = rmat_graph(9, edge_factor=8, seed=5)
+    fast = Template([8, 3, 8], [(0, 1), (1, 2), (2, 0)])  # 1-vertex head
+    slow = Template([6, 5, 6], [(0, 1), (1, 2), (2, 0)])  # wide head
+    templates = [fast, slow]
+    bres = prune_batch(g, templates, wave=32, guarantee_precision=False)
+    assert bres.stats.get("nlcc_lockstep_padded", 0) > 0, (
+        "expected at least one job to exhaust early and ride pad waves")
+    _assert_lane_parity(bres, templates, g, partition=None,
+                        wave=32, guarantee_precision=False)
+
+
+def test_deadline_cancellation_masks_lane():
+    """A deadline-missed lane is zeroed at a phase boundary and masked for
+    the rest of the batch; surviving lanes stay bit-identical."""
+    g = _graph()
+    templates = _variants()[:3]
+    bres = prune_batch(g, templates,
+                       deadlines=[None, 50.0, None],
+                       clock=lambda: 100.0)
+    assert bres.status == [STATUS_OK, STATUS_DEADLINE_MISSED, STATUS_OK]
+    dead = bres.results[1]
+    assert not np.asarray(dead.state.omega).any()
+    assert not np.asarray(dead.state.edge_active).any()
+    assert dead.stats["lane_status"] == STATUS_DEADLINE_MISSED
+    assert bres.stats["deadline_cancelled"] == 1
+    for i in (0, 2):
+        seq = prune(g, templates[i])
+        np.testing.assert_array_equal(
+            np.asarray(bres.results[i].state.omega),
+            np.asarray(seq.state.omega))
+        np.testing.assert_array_equal(
+            np.asarray(bres.results[i].state.edge_active),
+            np.asarray(seq.state.edge_active))
+
+
+def test_deadline_midrun_cancellation():
+    """A deadline crossed mid-run cancels at the NEXT phase boundary (ticking
+    clock), never aborting the batch."""
+    g = _graph()
+    templates = _variants()[:2]
+    tick = {"t": 0.0}
+
+    def clock():
+        tick["t"] += 1.0
+        return tick["t"]
+
+    bres = prune_batch(g, templates, deadlines=[1.5, None], clock=clock)
+    assert bres.status[0] == STATUS_DEADLINE_MISSED
+    assert bres.status[1] == STATUS_OK
+    assert not np.asarray(bres.results[0].state.omega).any()
+    seq = prune(g, templates[1])
+    np.testing.assert_array_equal(
+        np.asarray(bres.results[1].state.omega), np.asarray(seq.state.omega))
+
+
+def test_mixed_bucket_batch_rejected():
+    g = _graph()
+    t_small = Template([5, 4], [(0, 1)])                      # bucket 2
+    t_big = Template([5, 4, 3, 2], [(0, 1), (1, 2), (2, 3)])  # bucket 4
+    with pytest.raises(ValueError, match="bucket"):
+        prune_batch(g, [t_small, t_big])
+
+
+def test_batched_route_resolution_uses_batch_bucket():
+    """The batched executor resolves prune.nlcc under a b<B>-prefixed bucket
+    so batched routes tune separately from single-query ones."""
+    g = _graph()
+    templates = _variants()[:2]
+    bres = prune_batch(g, templates)
+    bucket = bres.stats["batched"]["bucket"]
+    assert bucket.startswith("b2x")
+    assert bres.stats["dispatch_routes"]["prune.nlcc"] != "none"

@@ -1,0 +1,180 @@
+"""Graph-query serving engine (serve/graph_query.py): admission, bucketed
+batching under max-wait/max-batch, deadlines, streamed emission.
+
+Driven with a fake clock throughout — batching and deadline decisions are
+asserted exactly, never timed.
+"""
+import numpy as np
+import pytest
+
+from repro.graph import rmat_graph
+from repro.core import Template, prune, count_matches
+from repro.core.batch import STATUS_OK, STATUS_DEADLINE_MISSED
+from repro.serve import (GraphQueryEngine, example_workload,
+                         MODE_PRUNE, MODE_COUNT, MODE_STREAM)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _graph():
+    return rmat_graph(8, edge_factor=6, seed=3)
+
+
+def _engine(g=None, **kw):
+    clock = FakeClock()
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 1.0)
+    return GraphQueryEngine(g if g is not None else _graph(),
+                            clock=clock, **kw), clock
+
+
+def test_batcher_waits_then_launches_on_max_wait():
+    eng, clock = _engine()
+    t = Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)])
+    eng.submit(t)
+    assert eng.pump() == []  # not full, not overdue -> keeps waiting
+    assert eng.n_pending == 1
+    clock.t = 1.5  # oldest query is now past max_wait_s
+    out = eng.pump()
+    assert len(out) == 1 and out[0].status == STATUS_OK
+    assert out[0].batch_size == 1
+    assert eng.n_pending == 0
+
+
+def test_batcher_launches_full_batch_immediately():
+    eng, _ = _engine(max_batch=2)
+    t = Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)])
+    eng.submit(t)
+    eng.submit(t)
+    out = eng.pump()  # full batch -> no waiting
+    assert len(out) == 2
+    assert {r.batch_size for r in out} == {2}
+    assert eng.stats["n_batches"] == 1
+
+
+def test_batcher_groups_by_shape_bucket():
+    """Different-bucket templates never share a batch; same-bucket ones do."""
+    eng, clock = _engine(max_batch=8)
+    small = Template([5, 4], [(0, 1)])                      # bucket 2
+    big = Template([5, 4, 3, 2], [(0, 1), (1, 2), (2, 3)])  # bucket 4
+    ids = [eng.submit(x) for x in (big, small, big, small)]
+    clock.t = 2.0
+    out = eng.pump()
+    assert len(out) == 4
+    by_id = {r.query_id: r for r in out}
+    assert by_id[ids[0]].batch_id == by_id[ids[2]].batch_id
+    assert by_id[ids[1]].batch_id == by_id[ids[3]].batch_id
+    assert by_id[ids[0]].batch_id != by_id[ids[1]].batch_id
+    assert eng.stats["n_batches"] == 2
+
+
+def test_queued_deadline_cancellation_skips_execution():
+    """A query whose deadline passes while queued is emitted deadline_missed
+    without device time; batchmates run normally."""
+    eng, clock = _engine()
+    t = Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)])
+    qid_dead = eng.submit(t, timeout_s=0.5)
+    qid_live = eng.submit(t)
+    clock.t = 2.0
+    out = eng.pump()
+    by_id = {r.query_id: r for r in out}
+    assert by_id[qid_dead].status == STATUS_DEADLINE_MISSED
+    assert by_id[qid_dead].batch_id is None  # cancelled in queue, not run
+    assert by_id[qid_live].status == STATUS_OK
+    assert eng.stats["n_deadline_missed"] == 1
+
+
+def test_count_mode_matches_standalone_prune():
+    g = _graph()
+    eng, clock = _engine(g)
+    t = Template([5, 4, 3, 2], [(0, 1), (1, 2), (2, 3)])
+    qid = eng.submit(t, mode=MODE_COUNT)
+    clock.t = 2.0
+    (r,) = eng.pump()
+    seq = prune(g, t)
+    want = int(count_matches(seq.dg, seq.state, t).n_embeddings)
+    assert r.n_embeddings == want
+    np.testing.assert_array_equal(
+        np.asarray(eng.result(qid).result.state.omega),
+        np.asarray(seq.state.omega))
+
+
+def test_stream_emission():
+    """MODE_STREAM queries emit embedding blocks identical to the standalone
+    enumeration of the sequentially pruned subgraph."""
+    g = _graph()
+    eng, clock = _engine(g)
+    t = Template([5, 4, 3, 2], [(0, 1), (1, 2), (2, 3)])
+    qid = eng.submit(t, mode=MODE_STREAM)
+    clock.t = 2.0
+    eng.pump()
+    rows = [b for b in eng.stream(qid, chunk=64)]
+    got = (np.concatenate(rows) if rows
+           else np.empty((0, t.n0), np.int32))
+    from repro.core import enumerate_matches
+    seq = prune(g, t)
+    want = enumerate_matches(seq.dg, seq.state, t).embeddings
+    got = got[np.lexsort(got.T[::-1])]
+    want = want[np.lexsort(want.T[::-1])]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_stream_of_deadline_missed_query_is_empty():
+    eng, clock = _engine()
+    t = Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)])
+    qid = eng.submit(t, mode=MODE_STREAM, timeout_s=0.1)
+    clock.t = 5.0
+    eng.pump()
+    assert list(eng.stream(qid)) == []
+
+
+def test_drain_32_query_workload_zero_dropped():
+    """Acceptance: a 32-query mixed-template workload drains completely —
+    every submitted query gets a result and none is dropped (the only
+    non-ok status possible is an explicit deadline miss; here none)."""
+    g = _graph()
+    eng, clock = _engine(g, max_batch=8)
+    templates = example_workload(32, seed=1,
+                                 labels_max=int(g.labels.max()))
+    ids = [eng.submit(t, mode=MODE_PRUNE) for t in templates]
+    results = eng.drain()
+    assert len(results) == 32
+    assert eng.n_pending == 0
+    assert {r.query_id for r in results} == set(ids)
+    assert all(r.status == STATUS_OK for r in results)
+    assert eng.stats["n_completed"] == 32
+    assert eng.stats["n_deadline_missed"] == 0
+    # batches actually formed (not 32 singleton launches)
+    assert eng.stats["n_batches"] <= 8
+    assert max(b["B"] for b in eng.stats["batches"]) == 8
+
+
+def test_policy_cache_routing_at_startup(tmp_path):
+    """A tuned dispatch-policy cache passed at engine startup drives batched
+    route resolution (b<B>-prefixed bucket keys)."""
+    from repro.kernels import registry
+
+    g = _graph()
+    pol = registry.DispatchPolicy()
+    bucket = registry.batch_bucket(
+        2, registry.shard_bucket(1, g.n, 1024))
+    import jax
+    pol.set_route("prune.nlcc", jax.default_backend(), bucket,
+                  registry.ROUTE_UNPACKED)
+    path = tmp_path / "policy.json"
+    pol.save(path)
+    eng, clock = _engine(g, policy=str(path), max_batch=2, wave=1024)
+    assert eng.stats.get("policy_active")
+    t = Template([4, 3, 3], [(0, 1), (1, 2), (2, 0)])
+    eng.submit(t)
+    eng.submit(t)
+    out = eng.pump()
+    assert all(r.status == STATUS_OK for r in out)
+    lane = eng.result(out[0].query_id).result
+    assert lane.stats["dispatch_routes"]["prune.nlcc"] == "unpacked"

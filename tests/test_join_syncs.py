@@ -1,0 +1,85 @@
+"""Host-sync accounting of the distributed-rows join (core/join.py).
+
+The folded handshake pins the contract: RowShardedJoin performs exactly ONE
+host readback per step() call — the [P, 2, P] count+capacity matrix — with
+no separate frontier-column readback before an expansion. The
+``rowshard_host_syncs`` stats counter is incremented at that single readback
+site, so counter == number of step() calls is the pin.
+"""
+import numpy as np
+import pytest
+
+from repro.graph import rmat_graph
+from repro.core import Template, prune, enumerate_matches
+from repro.core import join as join_mod
+from repro.core.enumerate import template_walk
+
+
+def _engine(P=2, seed=5):
+    g = rmat_graph(9, edge_factor=6, seed=seed)
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl, partition=P, guarantee_precision=False)
+    walk = template_walk(tmpl)
+    stats = {}
+    eng = join_mod.RowShardedJoin(res.backend.join_context(), tmpl, walk,
+                                  max_rows=2_000_000, stats=stats)
+    return eng, stats
+
+
+@pytest.mark.parametrize("P", [1, 2, 4])
+def test_one_host_sync_per_step(P):
+    eng, stats = _engine(P=P)
+    sources = eng.sources()
+    assert sources.size > 0
+    rows = eng.seed(sources)
+    n_calls = 0
+    for r in range(1, len(eng.steps) + 1):
+        if eng.nrows(rows) == 0:
+            break
+        rows = eng.step(rows, r)
+        n_calls += 1
+    assert n_calls == len(eng.steps)  # the cyclic walk survives every step
+    assert stats.get("rowshard_host_syncs", 0) == n_calls
+    assert eng.nrows(rows) > 0
+
+
+def test_expand_and_revisit_both_single_sync():
+    """The walk above ends in a revisit (cycle closure), so both step kinds
+    are exercised; assert the per-kind accounting explicitly."""
+    eng, stats = _engine(P=2)
+    kinds = [s.kind for s in eng.steps]
+    assert "expand" in kinds and "revisit" in kinds
+    rows = eng.seed(eng.sources())
+    for r in range(1, len(eng.steps) + 1):
+        before = stats.get("rowshard_host_syncs", 0)
+        rows = eng.step(rows, r)
+        assert stats["rowshard_host_syncs"] == before + 1, (
+            f"step {r} ({kinds[r - 1]}) performed more than one handshake")
+
+
+def test_capacity_folds_through_exchange():
+    """A routed block carries the NEXT step's expansion capacity from the
+    same handshake that sized it — equal to the host recomputation from the
+    static degree table."""
+    eng, _ = _engine(P=2)
+    rows = eng.seed(eng.sources())
+    for r in range(1, len(eng.steps)):
+        rows = eng.step(rows, r)
+        nxt = eng.steps[r]
+        if nxt.kind != "expand":
+            continue
+        host = eng._gather(rows)
+        fcol = host[:, nxt.c_prev]
+        want = np.bincount(fcol // eng.n_local,
+                           weights=eng.rp.deg[fcol].astype(np.float64),
+                           minlength=eng.P).astype(np.int64)
+        np.testing.assert_array_equal(np.asarray(rows.cap), want)
+
+
+def test_enumeration_reports_sync_counter():
+    g = rmat_graph(9, edge_factor=6, seed=5)
+    tmpl = Template([8, 7, 7], [(0, 1), (1, 2), (2, 0)])
+    res = prune(g, tmpl, partition=2, guarantee_precision=False)
+    stats = {}
+    enumerate_matches(res, route="rowsharded", mode="count", stats=stats)
+    assert stats.get("rowshard_host_syncs", 0) > 0

@@ -311,6 +311,92 @@ def test_tune_measures_candidates_and_persists(tmp_path):
     assert registry.DispatchPolicy.load(path).to_json() == pol.to_json()
 
 
+# ------------------------------------------- batched buckets / cache compat
+def test_batch_bucket_rendering_and_separate_tuning():
+    base = registry.shard_bucket(4, 512, 1024)
+    b8 = registry.batch_bucket(8, base)
+    assert registry.bucket_key(b8) == "b8xp4x512x1024"
+    assert registry.bucket_key(registry.batch_bucket(6, (2048, 1024))) == (
+        "b8x2048x1024")  # batch size pow2-rounds like any other dim
+    # a batched decision never shadows (or is shadowed by) the unbatched one
+    pol = registry.DispatchPolicy()
+    pol.set_route(NLCC_ROUTE, "cpu", base, registry.ROUTE_UNPACKED)
+    pol.set_route(NLCC_ROUTE, "cpu", b8, registry.ROUTE_FUSED)
+    assert pol.route_for(NLCC_ROUTE, "cpu", base) == registry.ROUTE_UNPACKED
+    assert pol.route_for(NLCC_ROUTE, "cpu", b8) == registry.ROUTE_FUSED
+    # B=8 with no batched entry falls to the wildcard, NOT the unbatched key
+    pol2 = registry.DispatchPolicy()
+    pol2.set_route(NLCC_ROUTE, "cpu", base, registry.ROUTE_UNPACKED)
+    pol2.set_route(NLCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                   registry.ROUTE_PACKED)
+    assert pol2.route_for(NLCC_ROUTE, "cpu", b8) == registry.ROUTE_PACKED
+
+
+def test_b1_lookup_resolves_pre_batching_cache_entries():
+    """Forward-compat: a cache tuned before the batch axis existed has no
+    ``b<B>`` keys; batch-size-1 lookups must resolve its unbatched entries
+    (exact bucket, then wildcard) — an old cache keeps working untouched."""
+    base = registry.shard_bucket(4, 512, 1024)
+    pol = registry.DispatchPolicy()
+    pol.set_route(NLCC_ROUTE, "cpu", base, registry.ROUTE_FUSED,
+                  {"fused": 0.01})
+    b1 = registry.batch_bucket(1, base)
+    assert registry.bucket_key(b1) == "b1xp4x512x1024"
+    assert pol.route_for(NLCC_ROUTE, "cpu", b1) == registry.ROUTE_FUSED
+    entry = pol.route_entry_for(NLCC_ROUTE, "cpu", b1)
+    assert entry is not None and entry.measured_s == {"fused": 0.01}
+    # an explicit b1 entry (a re-tune on the batched path) wins over compat
+    pol.set_route(NLCC_ROUTE, "cpu", b1, registry.ROUTE_PACKED)
+    assert pol.route_for(NLCC_ROUTE, "cpu", b1) == registry.ROUTE_PACKED
+    # b1 over the wildcard bucket reaches the plain wildcard entry
+    pol2 = registry.DispatchPolicy()
+    pol2.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY,
+                  registry.MODE_INTERPRET)
+    assert pol2.mode_for(
+        "bitset_spmm", "cpu",
+        registry.batch_bucket(1, registry.BUCKET_ANY)) == (
+            registry.MODE_INTERPRET)
+
+
+def test_tune_extends_existing_cache_instead_of_invalidating(tmp_path):
+    """registry.tune() must not throw away decisions it didn't re-measure:
+    with no explicit policy it loads the cache at the target path and
+    extends it — the pre-existing (e.g. hand-tuned or unbatched) entries
+    survive the re-tune byte-for-byte."""
+    path = str(tmp_path / "tuned.json")
+    old = registry.DispatchPolicy()
+    old.set_route(LCC_ROUTE, "cpu", (2048, 32768), registry.ROUTE_PACKED,
+                  {"packed": 0.05, "unpacked": 0.07})
+    old.set_mode("bitset_spmm", "cpu", registry.BUCKET_ANY,
+                 registry.MODE_INTERPRET, {"interpret": 0.001})
+    old.save(path)
+
+    pol = registry.tune(
+        routes=[("test.batched", registry.batch_bucket(8, (2048, 1024)),
+                 {"a": lambda: None, "b": lambda: None})],
+        repeat=1, path=path,
+    )
+    key = f"{LCC_ROUTE}|cpu|2048x32768"
+    assert pol.routes[key].choice == registry.ROUTE_PACKED
+    assert pol.routes[key].measured_s == {"packed": 0.05, "unpacked": 0.07}
+    assert pol.modes["bitset_spmm|cpu|*"].choice == registry.MODE_INTERPRET
+    assert "test.batched|cpu|b8x2048x1024" in pol.routes
+    # and the merged table is what got persisted
+    reloaded = registry.DispatchPolicy.load(path)
+    assert reloaded.to_json() == pol.to_json()
+
+
+def test_tune_replaces_unreadable_cache(tmp_path):
+    path = tmp_path / "stale.json"
+    path.write_text('{"schema_version": 999}')
+    pol = registry.tune(
+        routes=[("test.route", registry.BUCKET_ANY, {"a": lambda: None})],
+        repeat=1, path=str(path),
+    )
+    assert list(pol.routes) == [f"test.route|cpu|{registry.BUCKET_ANY}"]
+    registry.DispatchPolicy.load(str(path))  # rewritten, readable again
+
+
 # ----------------------------------------------------------------- roll-up
 def _minimal_rollup_suites():
     return {"dispatch_policy": {"seconds": 1.5, "ok": True,
