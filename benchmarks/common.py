@@ -160,6 +160,18 @@ def validate_rollup(payload: Dict) -> None:
         need(mt, "serve_queries", int, "multi_tenant")
         need(mt, "serve_dropped", int, "multi_tenant")
         need(mt, "serve_batches", int, "multi_tenant")
+    if "query_plan" in payload:  # additive (PR 10): plan-level optimizer point
+        qp = payload["query_plan"]
+        if not isinstance(qp, dict):
+            raise ValueError("roll-up query_plan must be a dict")
+        need(qp, "heuristic_seconds", (int, float), "query_plan")
+        need(qp, "planned_seconds", (int, float), "query_plan")
+        need(qp, "heuristic_frontier_bits", int, "query_plan")
+        need(qp, "planned_frontier_bits", int, "query_plan")
+        need(qp, "heuristic_walks", int, "query_plan")
+        need(qp, "planned_walks", int, "query_plan")
+        need(qp, "reordered", bool, "query_plan")
+        need(qp, "bit_identical", bool, "query_plan")
     if "resilience" in payload:  # additive (PR 7): fault-recovery point
         rs = payload["resilience"]
         if not isinstance(rs, dict):
@@ -186,6 +198,7 @@ def write_rollup(
     distributed_join: Optional[Dict] = None,
     load_balance: Optional[Dict] = None,
     multi_tenant: Optional[Dict] = None,
+    query_plan: Optional[Dict] = None,
     resilience: Optional[Dict] = None,
     policy_fallback: Optional[Dict] = None,
     path: Optional[str] = None,
@@ -221,6 +234,13 @@ def write_rollup(
     "serve_batches": ...} — the template-batched execution point from
     benchmarks/multi_tenant.py (additive, PR 9; the CI smoke job gates
     counts_match and batched_seconds < sequential_seconds)
+    query_plan  {"heuristic_seconds": ..., "planned_seconds": ...,
+    "heuristic_frontier_bits"/"planned_frontier_bits": ...,
+    "heuristic_walks"/"planned_walks": ..., "reordered": ...,
+    "bit_identical": ...} — the plan-level optimizer point from
+    benchmarks/query_plan.py (additive, PR 10; the CI smoke job gates
+    bit_identical plus the planned <= heuristic shape facts — walk
+    dispatches and entering-frontier bits, both host-speed-immune)
     resilience  {"P": ..., "restart_P": ..., "phases_checkpointed": ...,
     "checkpoint_overhead_seconds": ..., "recovery_seconds": ...,
     "scratch_seconds": ..., "parity_ok": ...,
@@ -260,6 +280,8 @@ def write_rollup(
         payload["load_balance"] = dict(load_balance)
     if multi_tenant:
         payload["multi_tenant"] = dict(multi_tenant)
+    if query_plan:
+        payload["query_plan"] = dict(query_plan)
     if resilience:
         payload["resilience"] = dict(resilience)
     validate_rollup(payload)

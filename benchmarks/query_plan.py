@@ -1,0 +1,156 @@
+"""Plan-level query optimizer: planned vs heuristic constraint order on an
+adversarial template (core/planner.py).
+
+The adversarial shape: one template holding BOTH a frequent-label triangle
+(short walk, expensive, weakly selective) and a rare-label square (longer
+walk, cheap, highly selective), sharing a vertex. The paper's heuristic
+order sorts non-local constraints by walk length first, so it runs the
+expensive triangle against the full post-LCC frontier before the square
+has had a chance to shrink it. The planner's calibrated cost model sees
+through the length tie-break and runs the rare-label square first. Both
+orders end in the complete edge-cover TDS phase, which maps any sound
+intermediate superset to the exact match set — the two runs must be
+BIT-IDENTICAL (hard assert -> bit_identical).
+
+CI gates on shape facts, not wall time (host-speed-immune):
+  - bit_identical (omega + edge mask + match counts),
+  - planned_walks <= heuristic_walks — NLCC walk dispatches each order
+    issues (the planner's direction choice runs one cycle rotation where
+    the default runs them all), and
+  - planned_frontier_bits <= heuristic_frontier_bits — total omega
+    candidacy bits ENTERING each non-local constraint phase.
+All three are pure functions of the chosen plan and the graph — none
+depends on how fast this host runs. Wall seconds for both orders are
+recorded for the perf trajectory.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import count_matches, heuristic_plan, plan_query
+from repro.core import nlcc as nlcc_mod
+from repro.core import planner
+from repro.core.template import generate_constraints
+from repro.core.pipeline import prune
+from repro.core.template import Template
+from repro.graph import collect_graph_stats
+from repro.graph import generators as gen
+from repro.graph.structs import Graph
+from benchmarks.common import graph_for, save
+
+# graph_for labels by degree: l(v) = ceil(log2(deg+1)) — labels 2-4 are the
+# frequent bulk, labels 7-10 the rare high-degree tail. Triangle 0-1-2 on
+# frequent labels; square 0-3-4-5 descending into rare labels. Both emit
+# cycle constraints; the triangle's walk is shorter, so the heuristic runs
+# it first — the planner should not.
+LABELS = [3, 2, 3, 8, 9, 7]
+EDGES = [(0, 1), (1, 2), (2, 0),            # frequent-label triangle
+         (0, 3), (3, 4), (4, 5), (5, 0)]    # rare-label selective square
+TEMPLATE = Template(LABELS, EDGES)
+N_PLANTED = 5
+
+
+def _walk_dispatches(qp) -> int:
+    """NLCC walk expansions the plan issues — each is its own wave-loop
+    dispatch sequence, so fewer walks on the same frontier is strictly less
+    device work (nlcc.expand_walks is the one expansion rule)."""
+    return sum(len(nlcc_mod.expand_walks(p.constraint, p.direction))
+               for p in qp.phases if p.engine == planner.ENGINE_NLCC)
+
+
+def _frontier_bits(res) -> int:
+    """Total omega candidacy bits entering each non-local constraint phase —
+    the structural work proxy the plan gate reads. The trajectory interleaves
+    constraint phases with conditional LCC re-runs; each phase's entering
+    frontier is the omega_bits its predecessor left behind."""
+    total = 0
+    for prev, ph in zip(res.phases, res.phases[1:]):
+        if ph.phase.startswith("NLCC"):
+            total += int(prev.omega_bits)
+    return total
+
+
+def run(scale: str = "small") -> Dict:
+    bg = graph_for(scale)
+    # plant matches so the adversarial query is a needle search, not a
+    # provably-empty one — the planted copies keep every phase's surviving
+    # frontier (and the final match count) non-trivial
+    pattern = Graph.from_undirected_pairs(TEMPLATE.n0, EDGES, LABELS)
+    g = gen.planted_pattern_graph(bg, pattern, n_copies=N_PLANTED, seed=7)
+    label_freq = g.label_frequency()
+    st = collect_graph_stats(g)
+    qp = plan_query(TEMPLATE, st, label_freq=label_freq)
+
+    # warm-up both orders: steady-state comparison, not first-touch tracing
+    prune(g, TEMPLATE, label_freq=label_freq)
+    prune(g, TEMPLATE, plan=qp, label_freq=label_freq)
+
+    t0 = time.perf_counter()
+    heur = prune(g, TEMPLATE, label_freq=label_freq)
+    heuristic_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    planned = prune(g, TEMPLATE, plan=qp, label_freq=label_freq)
+    planned_s = time.perf_counter() - t0
+
+    bit_identical = (
+        np.array_equal(np.asarray(heur.state.omega),
+                       np.asarray(planned.state.omega))
+        and np.array_equal(np.asarray(heur.state.edge_active),
+                           np.asarray(planned.state.edge_active)))
+    ch = int(count_matches(heur.dg, heur.state, TEMPLATE,
+                           label_freq=label_freq).n_embeddings)
+    cp = int(count_matches(planned.dg, planned.state, TEMPLATE,
+                           label_freq=label_freq).n_embeddings)
+    bit_identical = bool(bit_identical and ch == cp)
+    assert bit_identical, ("planned order diverged from heuristic", ch, cp)
+
+    heuristic_bits = _frontier_bits(heur)
+    planned_bits = _frontier_bits(planned)
+    cs = generate_constraints(TEMPLATE, label_freq=label_freq)
+    heuristic_walks = _walk_dispatches(heuristic_plan(cs))
+    planned_walks = _walk_dispatches(qp)
+
+    out = {
+        "graph": {"n": g.n, "m": g.m},
+        "template": {"n0": TEMPLATE.n0, "m0": TEMPLATE.m0},
+        "plan_source": qp.source,
+        "plan": [{"sig": p.signature, "engine": p.engine,
+                  "direction": p.direction} for p in qp.phases],
+        "heuristic_order": [ph["sig"]
+                            for ph in heur.stats["plan"]["phases"]],
+        "predicted_s": qp.predicted_s,
+        "heuristic_seconds": heuristic_s,
+        "planned_seconds": planned_s,
+        "speedup": heuristic_s / max(planned_s, 1e-9),
+        "heuristic_frontier_bits": heuristic_bits,
+        "planned_frontier_bits": planned_bits,
+        "heuristic_walks": heuristic_walks,
+        "planned_walks": planned_walks,
+        "bit_identical": bit_identical,
+        "n_embeddings": ch,
+        "predicted_vs_actual": [
+            {"sig": ph["sig"], "predicted_s": ph["predicted_s"],
+             "actual_s": ph["actual_s"]}
+            for ph in planned.stats["plan"]["phases"]],
+        "rollup": {
+            "heuristic_seconds": heuristic_s,
+            "planned_seconds": planned_s,
+            "heuristic_frontier_bits": heuristic_bits,
+            "planned_frontier_bits": planned_bits,
+            "heuristic_walks": heuristic_walks,
+            "planned_walks": planned_walks,
+            "reordered": not qp.is_heuristic(),
+            "bit_identical": bit_identical,
+        },
+    }
+    save("query_plan", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(), indent=2, default=str))

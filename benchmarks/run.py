@@ -34,6 +34,7 @@ SUITES = [
     ("enumeration_compare", "Tables 4/5: vs tree-search enumeration"),
     ("distributed_join", "beyond-paper: replicated vs distributed-rows join"),
     ("multi_tenant", "beyond-paper: template-batched B-query execution"),
+    ("query_plan", "plan-level optimizer: planned vs heuristic order"),
     ("template_sensitivity", "Table 6: template topology family"),
     ("rmat_distributions", "Table 10: R-MAT skew sweep"),
     ("frontier_edge_prune", "beyond-paper: CC edge-exactness, TDS skipped"),
@@ -97,7 +98,8 @@ def main(argv=None):
                            for k in ("graph", "phases", "nlcc_wave",
                                      "sharded_prune", "enumeration",
                                      "distributed_join", "load_balance",
-                                     "multi_tenant", "resilience", "policy")}
+                                     "multi_tenant", "query_plan",
+                                     "resilience", "policy")}
         path = common.write_rollup(
             suites, args.scale,
             graph=dp.get("graph") or carried.get("graph"),
@@ -113,6 +115,8 @@ def main(argv=None):
                           or carried.get("load_balance")),
             multi_tenant=(payloads.get("multi_tenant", {}).get("rollup")
                           or carried.get("multi_tenant")),
+            query_plan=(payloads.get("query_plan", {}).get("rollup")
+                        or carried.get("query_plan")),
             resilience=(payloads.get("resilience", {}).get("rollup")
                         or carried.get("resilience")),
             policy_fallback=carried.get("policy"),

@@ -17,10 +17,14 @@ from repro.core.enumerate import (
     template_walk,
 )
 from repro.core.oracle import enumerate_matches_bruteforce, solution_subgraph_oracle
+from repro.core.planner import (
+    PlanPhase, QueryPlan, plan_query, heuristic_plan, resolve_query_plan,
+    record_plan, constraint_signature, template_signature, plan_bucket,
+)
 from repro.core.resilience import (
     ResilienceConfig, ElasticConfig, RetryPolicy, FaultInjector, FaultSpec,
     InjectedFault, ShardLost, CollectiveTimeout, TransientKernelFailure,
-    ResourceExhausted, PhaseFailed, ResilienceExhausted,
+    ResourceExhausted, PhaseFailed, ResilienceExhausted, PlanMismatch,
 )
 
 __all__ = [
@@ -62,4 +66,14 @@ __all__ = [
     "ResourceExhausted",
     "PhaseFailed",
     "ResilienceExhausted",
+    "PlanMismatch",
+    "PlanPhase",
+    "QueryPlan",
+    "plan_query",
+    "heuristic_plan",
+    "resolve_query_plan",
+    "record_plan",
+    "constraint_signature",
+    "template_signature",
+    "plan_bucket",
 ]

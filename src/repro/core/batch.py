@@ -225,22 +225,38 @@ class BatchedEngine:
         return self._fns[key]
 
     # -- state --------------------------------------------------------------
-    def init(self) -> None:
+    def init(self, stats: Optional[Dict] = None) -> None:
         lanes = []
         labels_local = np.asarray(self.part.labels_local)
         vertex_valid = np.asarray(self.part.vertex_valid)
+        # shared-LCC prefix: ONE label-candidacy plane per DISTINCT template
+        # label across the whole batch — lanes with identical label multisets
+        # (the common case: many analysts, few schemas) assemble their
+        # initial omega from the same planes instead of recomputing per lane.
+        # Column q of a lane is exactly (labels_local == t.labels[q]) &
+        # vertex_valid, the same boolean plane the per-lane label_matrix
+        # construction produced — bit-identical by construction.
+        planes: Dict[int, np.ndarray] = {}
+
+        def plane(l: int) -> np.ndarray:
+            if l not in planes:
+                planes[l] = (labels_local == l) & vertex_valid
+            return planes[l]
+
+        zero = np.zeros(labels_local.shape, bool)
         for t in self.templates:
-            n_labels = int(max(t.labels.max() + 1, labels_local.max() + 1))
-            lm = t.label_matrix(n_labels)  # [n0, L]
-            bits = lm.T[labels_local]  # [P, n_local, n0]
-            if t.n0 < self.n0p:  # pad lanes to the common bucket width
-                bits = np.concatenate([bits, np.zeros(
-                    bits.shape[:2] + (self.n0p - t.n0,), bool)], axis=-1)
-            bits &= vertex_valid[..., None]
+            cols = [plane(int(t.labels[q])) for q in range(t.n0)]
+            cols += [zero] * (self.n0p - t.n0)  # pad to common bucket width
+            bits = np.stack(cols, axis=-1)  # [P, n_local, n0p]
             om = np.asarray(pack_bits(jnp.asarray(bits)))
             om = np.concatenate(
                 [om, np.zeros((self.P, 1, self.W), np.uint32)], axis=1)
             lanes.append(om)
+        if stats is not None:
+            stats["shared_candidacy_planes"] = {
+                "distinct": len(planes),
+                "lane_columns": int(sum(t.n0 for t in self.templates)),
+            }
         self.omega_b = jnp.asarray(np.stack(lanes, axis=1))
         ea = np.asarray(~self.part.send_pad)  # [P, P, B]
         self.ea_b = jnp.asarray(
@@ -384,23 +400,19 @@ class BatchedEngine:
         return finish
 
     def nlcc_phase(self, lane_constraints: Sequence[
-            Tuple[int, NonLocalConstraint]], cstats: Optional[Dict] = None):
-        """Run one lockstep phase of cycle/path constraints — one entry per
-        lane — through job-axis batched wave dispatches. Returns a DEVICE
-        bool (did any lane's omega change); the driver converts it to the
-        phase's single host sync."""
+            Tuple[int, NonLocalConstraint, str]],
+            cstats: Optional[Dict] = None):
+        """Run one lockstep phase of token-passing constraints — one
+        (lane, constraint, direction) entry per lane — through job-axis
+        batched wave dispatches. Returns a DEVICE bool (did any lane's omega
+        change); the driver converts it to the phase's single host sync."""
         from repro.kernels import registry
 
         omega_before = self.omega_b
         jobs: List[Tuple[int, Tuple[int, ...]]] = []
-        for lane, c in lane_constraints:
-            if c.is_cyclic:
-                base = c.walk[:-1]
-                walks = [tuple(base[i:] + base[:i]) + (base[i],)
-                         for i in range(len(base))]
-            else:
-                walks = [c.walk, tuple(reversed(c.walk))]
-            jobs.extend((lane, w) for w in walks)
+        for lane, c, direction in lane_constraints:
+            jobs.extend((lane, w)
+                        for w in nlcc_mod.expand_walks(c, direction))
 
         # ONE stacked head-planes readback sizes every wave loop of the phase
         head = np.asarray(jnp.stack(
@@ -540,12 +552,35 @@ def prune_batch(
     cons = [generate_constraints(t, label_freq=label_freq,
                                  guarantee_precision=guarantee_precision)
             for t in templates]
+    # per-lane plan resolution (core/planner.py): tuned plans reorder a
+    # lane's phases; untuned (no plans in the active policy) every lane runs
+    # the heuristic order byte-identically, with zero stats collection
+    from repro.core import planner as planner_mod
+
+    phase_lists: List[List[planner_mod.PlanPhase]] = []
+    plan_sources: List[str] = []
+    policy = registry.get_policy()
+    if policy is not None and policy.plans:
+        from repro.graph import stats as gstats
+
+        gstat = gstats.collect_graph_stats(graph)
+        for t, cs in zip(templates, cons):
+            qp = planner_mod.resolve_query_plan(t, cs, gstat)
+            if qp is None:
+                qp = planner_mod.heuristic_plan(cs)
+            phase_lists.append(qp.phases)
+            plan_sources.append(qp.source)
+    else:
+        for cs in cons:
+            phase_lists.append(planner_mod.heuristic_plan(cs).phases)
+            plan_sources.append("heuristic")
     if deadlines is not None and len(deadlines) != len(templates):
         raise ValueError("deadlines must align with templates")
     clock = clock or time.monotonic
     status = [STATUS_OK] * eng.Bq
     stats: Dict = {
         "n_constraints": [len(c) for c in cons],
+        "plan": {"sources": plan_sources},
         "batched": {
             "B": eng.Bq, "P": eng.P, "backend": eng.name,
             "bucket": registry.bucket_key(eng.route_bucket()),
@@ -564,19 +599,24 @@ def prune_batch(
                     stats.get("deadline_cancelled", 0) + 1)
 
     t0 = time.perf_counter()
-    eng.init()
+    eng.init(stats)
     cancel_expired()
     eng.lcc(stats)
-    for k in range(max((len(c) for c in cons), default=0)):
+    # lockstep over PLANNED phase lists: phase identity is per-lane (lane i's
+    # phase k is phase_lists[i][k]), so differently-ordered lanes coexist in
+    # one batch — the engine split is by the planned engine, not the kind
+    for k in range(max((len(pl) for pl in phase_lists), default=0)):
         cancel_expired()
         wave_lanes = []
         tds_lanes = []
-        for i, cs in enumerate(cons):
-            if status[i] != STATUS_OK or k >= len(cs):
+        for i, pl in enumerate(phase_lists):
+            if status[i] != STATUS_OK or k >= len(pl):
                 continue
-            c = cs[k]
-            (wave_lanes if c.kind in ("cycle", "path")
-             else tds_lanes).append((i, c))
+            p = pl[k]
+            if p.engine == planner_mod.ENGINE_NLCC:
+                wave_lanes.append((i, p.constraint, p.direction))
+            else:
+                tds_lanes.append((i, p.constraint))
         changed_dev = eng.nlcc_phase(wave_lanes, stats) if wave_lanes else None
         # the phase's ONE host sync: did any lane change?
         changed = bool(changed_dev) if changed_dev is not None else False

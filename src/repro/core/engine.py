@@ -579,7 +579,8 @@ class LocalBackend:
         stats["lcc_iterations"] = stats.get("lcc_iterations", 0) + it
         return state
 
-    def nlcc(self, c: NonLocalConstraint, cstats: Dict):
+    def nlcc(self, c: NonLocalConstraint, cstats: Dict,
+             direction: str = "default"):
         from repro.core import nlcc as nlcc_mod
 
         self._fire("nlcc")
@@ -589,6 +590,7 @@ class LocalBackend:
             stats=cstats, count_messages=self.collect_stats,
             edge_prune=self.nlcc_edge_prune, template=self.template,
             blocked=self.blocked, force_pallas=self.force_pallas,
+            direction=direction,
         )
         return _state_changed(before, self.state)
 
@@ -866,7 +868,8 @@ class _ShardedBackend:
     def _cand_stack(self, walk: Sequence[int]) -> jnp.ndarray:
         return jnp.stack([self._omega_column(q) for q in walk], axis=1)  # [P, L+1, n_local]
 
-    def nlcc(self, c: NonLocalConstraint, cstats: Dict):
+    def nlcc(self, c: NonLocalConstraint, cstats: Dict,
+             direction: str = "default"):
         from repro.kernels import registry as _registry
         from repro.core import nlcc as nlcc_mod
 
@@ -882,11 +885,7 @@ class _ShardedBackend:
             if new is not state:
                 self.omega_all, self.ea_all = self.scatter_state(new)
 
-        if c.is_cyclic:
-            base = c.walk[:-1]
-            walks = [tuple(base[i:] + base[:i]) + (base[i],) for i in range(len(base))]
-        else:
-            walks = [c.walk, tuple(reversed(c.walk))]
+        walks = nlcc_mod.expand_walks(c, direction)
         heads = [w[0] for w in walks]
         L = len(walks[0]) - 1
         route = self._nlcc_route(L)

@@ -73,6 +73,38 @@ def wave_batches(sources: np.ndarray, wave: int):
 
 NLCC_ROUTE = "prune.nlcc"
 
+# Walk-direction choices a query plan may pin per constraint (core/planner.py).
+# "default" is the paper's expansion — every rotation of a cycle, both
+# directions of a path — and is what every untuned run executes. The others
+# run a SUBSET of those walks: strictly cheaper, strictly weaker, and still
+# sound (a true match certifies every walk, so skipping checks never prunes
+# one). The planner only emits non-default directions when a complete-walk
+# TDS phase runs last and restores exactness.
+PLAN_DIRECTIONS = ("default", "fwd", "rev", "head")
+
+
+def expand_walks(constraint: NonLocalConstraint, direction: str = "default"):
+    """The walk set a direction choice executes — the ONE expansion rule
+    shared by the local wave executor, the sharded backends, and the batched
+    lane driver, so a plan means the same thing everywhere."""
+    if constraint.is_cyclic:
+        base = constraint.walk[:-1]
+        if direction == "default":
+            # a cycle constraint prunes the head only; verify every rotation
+            return [
+                tuple(base[i:] + base[:i]) + (base[i],)
+                for i in range(len(base))
+            ]
+        if direction == "rev":
+            rb = tuple(reversed(base))
+            return [rb + (rb[0],)]
+        return [tuple(base) + (base[0],)]  # "head"/"fwd": stored rotation only
+    if direction in ("fwd", "head"):
+        return [constraint.walk]
+    if direction == "rev":
+        return [tuple(reversed(constraint.walk))]
+    return [constraint.walk, tuple(reversed(constraint.walk))]
+
 
 def nlcc_route_bucket(state: PruneState, wave: int):
     """Shape bucket for packed-vs-unpacked NLCC wave routing: vertex count and
@@ -326,6 +358,7 @@ def verify_constraint(
     template=None,
     blocked=None,
     force_pallas: bool = False,
+    direction: str = "default",
 ) -> PruneState:
     """Alg. 5 for CC/PC (+ each rotation for cycles): eliminate the head
     template vertex from omega of every failing token source.
@@ -366,14 +399,7 @@ def verify_constraint(
     those template arcs."""
     if edge_prune and template is not None:
         state = _edge_prune_pass(dg, state, constraint, template, wave, stats)
-    if constraint.is_cyclic:
-        # a cycle constraint prunes the head only; verify every rotation
-        base = constraint.walk[:-1]
-        walks = [
-            tuple(base[i:] + base[:i]) + (base[i],) for i in range(len(base))
-        ]
-    else:
-        walks = [constraint.walk, tuple(reversed(constraint.walk))]
+    walks = expand_walks(constraint, direction)
 
     from repro.kernels import registry as _registry
 

@@ -50,6 +50,7 @@ from repro.graph.structs import Graph, DeviceGraph
 from repro.core.template import Template, generate_constraints, NonLocalConstraint
 from repro.core.state import PruneState
 from repro.core import engine as engine_mod
+from repro.core import planner as planner_mod
 from repro.core import resilience as resilience_mod
 
 
@@ -116,6 +117,7 @@ def prune(
     tds_max_rows: int = 2_000_000,
     label_freq: Optional[np.ndarray] = None,
     constraints: Optional[List[NonLocalConstraint]] = None,
+    plan: Optional["planner_mod.QueryPlan"] = None,
     initial_state: Optional[PruneState] = None,
     collect_stats: bool = False,
     blocked=None,
@@ -203,15 +205,65 @@ def prune(
             template, label_freq=label_freq,
             guarantee_precision=guarantee_precision and not skip_complete,
         )
+        if plan is None:
+            # plan-level optimizer lookup (core/planner.py): only when the
+            # active policy carries tuned plans — an untuned checkout never
+            # touches graph stats and runs the heuristic order byte-identically
+            plan = _maybe_resolve_plan(graph, dg, template, constraints,
+                                       label_freq)
+    if plan is not None:
+        _check_plan(plan, constraints)
+        constraints = plan.constraints()
+    else:
+        plan = planner_mod.heuristic_plan(constraints)
     stats["n_constraints"] = len(constraints)
+    stats["plan"] = {
+        "source": plan.source,
+        "phases": [
+            {"sig": p.signature, "engine": p.engine,
+             "direction": p.direction,
+             "predicted_s": (plan.per_phase_s[i] if plan.per_phase_s
+                             else None),
+             "actual_s": None}
+            for i, p in enumerate(plan.phases)
+        ],
+    }
 
     driver = _Driver(
         graph=graph, template=template, backend=backend, dg=dg, stats=stats,
-        constraints=constraints, res=resilience, collect_stats=collect_stats,
+        plan=plan, res=resilience, collect_stats=collect_stats,
         mesh=mesh, backend_kw=backend_kw, initial_state=initial_state,
     )
     driver.run()
     return driver.finish()
+
+
+def _maybe_resolve_plan(graph, dg, template, constraints, label_freq):
+    from repro.kernels import registry
+
+    policy = registry.get_policy()
+    if policy is None or not policy.plans:
+        return None
+    from repro.graph import stats as gstats
+
+    if isinstance(graph, Graph):
+        st = gstats.collect_graph_stats(graph)
+    else:
+        nl = (len(label_freq) if label_freq is not None
+              else int(np.asarray(dg.labels).max()) + 1)
+        st = gstats.collect_graph_stats(dg, n_labels=nl)
+    return planner_mod.resolve_query_plan(template, constraints, st)
+
+
+def _check_plan(plan, constraints):
+    """An explicit/cached plan must cover exactly the constraints this run
+    generates — same multiset of signatures — or phase identity is broken."""
+    want = sorted(planner_mod.constraint_signature(c) for c in constraints)
+    got = sorted(plan.signatures())
+    if want != got:
+        raise ValueError(
+            f"query plan does not match generated constraints: plan phases "
+            f"{got} != constraints {want}")
 
 
 class _Driver:
@@ -222,21 +274,28 @@ class _Driver:
     only on success, so retried/replayed work never duplicates trajectory
     entries."""
 
-    def __init__(self, *, graph, template, backend, dg, stats, constraints,
+    def __init__(self, *, graph, template, backend, dg, stats, plan,
                  res, collect_stats, mesh, backend_kw, initial_state):
         self.graph = graph
         self.template = template
         self.backend = backend
         self.dg = dg  # ORIGINAL DeviceGraph — result/checkpoint coordinates
         self.stats = stats
-        self.constraints = constraints
+        self.plan = plan
+        self.phases = plan.phases
+        self.constraints = plan.constraints()
+        # phase identity BY SIGNATURE (not positional index): checkpoints of
+        # one plan must never resume under another (core/resilience.py).
+        # Identity includes engine+direction — a direction change alters the
+        # committed state, so same-order different-direction plans differ.
+        self.plan_sigs = plan.identities()
         self.res = res
         self.inj = res.injector if res is not None else None
         self.collect_stats = collect_stats
         self.mesh = mesh
         self.backend_kw = backend_kw
         self.initial_state = initial_state
-        self.K = len(constraints)
+        self.K = len(self.constraints)
         self.completed = -1
         self.committed: List[Tuple[int, tuple]] = []  # (phase idx, raw entry)
         self._stage: List[tuple] = []
@@ -252,14 +311,20 @@ class _Driver:
         self.backend.lcc(self.stats)
         self._snap("LCC", None, t0, {})
 
-    def _phase_constraint(self, c: NonLocalConstraint):
+    def _phase_constraint(self, k: int):
+        p = self.phases[k - 1]
+        c = p.constraint
         t0 = time.perf_counter()
         cstats: Dict = {}
-        if c.kind in ("cycle", "path"):
-            changed = self.backend.nlcc(c, cstats)
+        if p.engine == planner_mod.ENGINE_NLCC:
+            changed = self.backend.nlcc(c, cstats, direction=p.direction)
         else:
             changed = self.backend.tds(c, cstats)
         self._snap(f"NLCC-{c.kind}", str(c.walk), t0, cstats)
+        # predicted-vs-actual for the plan report; assignment (not +=) so a
+        # resilience replay of the phase records only the committed attempt
+        self.stats["plan"]["phases"][k - 1]["actual_s"] = (
+            time.perf_counter() - t0)
         # ONE device bool decides the re-run — not six blocking count reads
         if bool(changed):
             t0 = time.perf_counter()
@@ -307,8 +372,7 @@ class _Driver:
         if k == 0:
             body = self._phase_initial
         else:
-            body = functools.partial(
-                self._phase_constraint, self.constraints[k - 1])
+            body = functools.partial(self._phase_constraint, k)
 
         def attempt():
             self._stage = []
@@ -396,7 +460,12 @@ class _Driver:
         omega, ea = self._state_np_original()
         meta = {"phase": int(k), "backend": self.backend.name,
                 "n": int(self.dg.n), "m": int(ea.size),
-                "n0": int(self.template.n0)}
+                "n0": int(self.template.n0),
+                # phase identity BY CONSTRAINT SIGNATURE: a resumed run under
+                # a different (e.g. newly tuned) plan must refuse cleanly
+                # rather than replay the wrong phase at position k
+                "phase_sig": self._phase_sig(k),
+                "plan_sigs": list(self.plan_sigs)}
         part = getattr(self.backend, "part", None)
         if part is not None:
             meta["partition"] = part.meta()
@@ -406,6 +475,29 @@ class _Driver:
         rs = self.stats["resilience"]
         rs["checkpoints"] += 1
         rs["checkpoint_seconds"].append(time.perf_counter() - t0)
+
+    def _phase_sig(self, k: int) -> str:
+        """Signature identity of phase k: the initial LCC for k=0, else the
+        planned constraint the phase verified."""
+        return "lcc:init" if k == 0 else self.plan_sigs[k - 1]
+
+    def _check_ckpt_plan(self, meta: Dict, phase0: int):
+        """Refuse to resume a checkpoint written under a different plan.
+        Checkpoints predating the plan field (no "plan_sigs") fall back to
+        the old positional-index identity."""
+        stored = meta.get("plan_sigs")
+        if stored is not None and list(stored) != list(self.plan_sigs):
+            raise resilience_mod.PlanMismatch(
+                f"checkpoint at phase {phase0} was written under plan "
+                f"{list(stored)} but this run executes {list(self.plan_sigs)}"
+                " — phases are keyed by constraint signature; delete the "
+                "checkpoint or re-run under the original plan")
+        stored_sig = meta.get("phase_sig")
+        if (stored_sig is not None and 0 <= phase0 <= len(self.plan_sigs)
+                and str(stored_sig) != self._phase_sig(phase0)):
+            raise resilience_mod.PlanMismatch(
+                f"checkpoint phase {phase0} is {stored_sig!r} but this "
+                f"run's phase {phase0} is {self._phase_sig(phase0)!r}")
 
     # -- recovery -----------------------------------------------------------
     def _recover(self, cause: BaseException):
@@ -435,6 +527,7 @@ class _Driver:
                 omega=np.asarray(tree["omega"], bool),
                 edge_active=np.asarray(tree["edge_active"], bool))
             phase0 = int(meta["phase"])
+            self._check_ckpt_plan(meta, phase0)
         except FileNotFoundError:
             state0, phase0 = None, -1  # nothing saved yet: re-prune fresh
         P_old = int(getattr(self.backend, "P", 1))

@@ -1,0 +1,493 @@
+"""Plan-level query optimizer: cost-modeled constraint ordering per
+(template, graph-stats) bucket — GraphPi's schedule half for constraint
+pipelines (PR 5's automorphism restrictions are the other half).
+
+The paper runs constraints in one fixed heuristic order (template.py §3
+ordering). But the order in which constraints eliminate vertices dominates
+end-to-end prune cost: an early high-selectivity walk collapses the frontier
+before the expensive cycles ever issue a token. This module enumerates
+candidate *plans* — a permutation of the constraint list, a walk-direction
+choice per CC/PC constraint, and a TDS-vs-NLCC engine choice where both are
+sound — costs each with a calibrated model, and picks the argmin. Chosen
+plans persist in the dispatch-policy cache (`kernels/registry.py`, additive
+``plans`` table) keyed by (template signature, graph-stats bucket), so
+serving startup loads tuned plans for free and an untuned checkout runs the
+paper's order byte-identically.
+
+Soundness — when may a plan deviate from the heuristic order at all?
+Every phase is *reductive* and *monotone*: omega/edge bits only clear, and a
+bit is cleared only by certifying that no true match uses it (given the
+current sound superset state). So ANY phase order ends at a sound superset
+of the exact match state — but not necessarily the SAME superset: order A
+may eliminate a vertex whose removal strips support that order B never
+re-checks. Two things restore bit-identity:
+
+1. With ``guarantee_precision``, the COMPLETE edge-cover TDS walk
+   (annotate mode) maps any sound superset to the EXACT match set — exact
+   omega (Def. 1 zero false positives) and exact match-participating edges
+   — regardless of which superset it started from.
+2. The driver's conditional LCC fixpoint after the final phase makes the
+   edge mask a pure function of the final omega.
+
+Hence the planner's gate: a plan may permute constraints, weaken walk
+directions, or swap engines ONLY when the constraint list ends in a complete
+TDS phase, and that phase stays pinned last. Otherwise the heuristic order
+is the only sound plan and the planner returns it unchanged. Direction and
+engine deviations are all *sound relaxations or strengthenings* (a subset of
+the default walk checks, or a row join at least as strong as token passing):
+they can only move the intermediate state within the sound-superset lattice
+that the complete phase collapses to the same exact point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.template import (
+    Template,
+    NonLocalConstraint,
+    generate_constraints,
+    estimate_constraint_selectivity,
+)
+from repro.core import nlcc as nlcc_mod
+from repro.graph.stats import GraphStats
+
+ENGINE_NLCC = "nlcc"
+ENGINE_TDS = "tds"
+
+# enumeration budget: permute at most this many distinct cost classes
+# exhaustively (6! = 720 candidate orders); larger templates fall back to a
+# greedy cheapest-rank ordering
+MAX_ENUM_CLASSES = 6
+
+
+# ----------------------------------------------------------------- signatures
+def constraint_signature(c: NonLocalConstraint) -> str:
+    """Stable string identity of one constraint: kind, walk, completeness —
+    the unit of phase identity for plan entries and checkpoint metadata."""
+    sig = f"{c.kind}:{','.join(str(q) for q in c.walk)}"
+    return sig + ":complete" if c.complete else sig
+
+
+def template_signature(t: Template) -> str:
+    """Stable string identity of a template (labels + edge set) — the
+    template half of the plan bucket key."""
+    labels = ".".join(str(int(l)) for l in t.labels)
+    edges = ".".join(f"{a}-{b}" for a, b in sorted(t.edge_set))
+    return f"l{labels}_e{edges}"
+
+
+def plan_bucket(template: Template, stats: GraphStats) -> Tuple[str, str]:
+    """The (template-sig, stats-bucket) plan cache bucket — renders inside a
+    policy key as ``prune.plan|<backend>|<tsig>x<stats-bucket>``."""
+    return (template_signature(template), stats.bucket())
+
+
+# ----------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class PlanPhase:
+    """One planned pipeline phase: which constraint, on which engine, with
+    which walk-direction choice (nlcc engine only; see nlcc.expand_walks)."""
+
+    constraint: NonLocalConstraint
+    engine: str = ENGINE_NLCC  # "nlcc" | "tds"
+    direction: str = "default"
+
+    @property
+    def signature(self) -> str:
+        return constraint_signature(self.constraint)
+
+    @property
+    def identity(self) -> str:
+        """Full execution identity: constraint signature plus engine and
+        direction. Two phases with equal identity compute the same state
+        transition; checkpoints and batch groups key on this, not on the
+        bare signature (a direction change alters the committed state)."""
+        return f"{self.signature}@{self.engine}.{self.direction}"
+
+    def is_default(self) -> bool:
+        return (self.engine == default_engine(self.constraint)
+                and self.direction == "default")
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    phases: List[PlanPhase]
+    predicted_s: float = 0.0
+    # "heuristic" (paper order, untuned / reorder unsound), "planner" (cost
+    # model picked it), "policy" (loaded from the persisted plan cache)
+    source: str = "heuristic"
+    # per-phase model predictions (seconds), aligned with `phases`; the
+    # driver reports these next to actuals in stats["plan"]
+    per_phase_s: Optional[List[float]] = None
+
+    def signatures(self) -> List[str]:
+        return [p.signature for p in self.phases]
+
+    def identities(self) -> List[str]:
+        return [p.identity for p in self.phases]
+
+    def constraints(self) -> List[NonLocalConstraint]:
+        return [p.constraint for p in self.phases]
+
+    def is_heuristic(self) -> bool:
+        return all(p.is_default() for p in self.phases)
+
+
+def default_engine(c: NonLocalConstraint) -> str:
+    """The engine the unplanned driver dispatches this constraint to."""
+    return ENGINE_NLCC if c.kind in ("cycle", "path") else ENGINE_TDS
+
+
+def heuristic_plan(constraints: Sequence[NonLocalConstraint]) -> QueryPlan:
+    """The paper's §3 order with default engines/directions — what every
+    untuned run executes, byte-identically to a plan-less checkout."""
+    return QueryPlan(
+        phases=[PlanPhase(c, default_engine(c), "default")
+                for c in constraints],
+        source="heuristic",
+    )
+
+
+def reorder_is_sound(constraints: Sequence[NonLocalConstraint]) -> bool:
+    """Plans may deviate from the heuristic order only when a complete
+    edge-cover TDS phase exists to restore exactness (module docstring). The
+    generator always emits it LAST when `guarantee_precision` asked for one."""
+    return bool(constraints) and constraints[-1].complete
+
+
+# ----------------------------------------------------------------- cost model
+@functools.lru_cache(maxsize=None)
+def static_dispatch_seconds(backend: str, wave: int, m_bucket: int) -> float:
+    """Static per-dispatch cost of one token-forward hop at `wave` width over
+    ~`m_bucket` arcs, from the HLO cost model of a representative lowered hop
+    (launch/hlo_cost.py) — the fixed term the calibrated model adds per wave
+    dispatch. Falls back to an analytic estimate when lowering fails (no
+    compiler for `backend` in this process, unparsable HLO, ...)."""
+    try:
+        import jax
+        import jax.numpy as jnp
+        from repro.launch.hlo_cost import analyze
+
+        def hop(frontier, src, dst):
+            return jnp.zeros_like(frontier).at[dst].max(frontier[src])
+
+        m = max(int(m_bucket), 1)
+        lowered = jax.jit(hop).lower(
+            jax.ShapeDtypeStruct((max(wave, 1),), jnp.bool_),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+            jax.ShapeDtypeStruct((m,), jnp.int32),
+        )
+        cost = analyze(lowered.compile().as_text())
+        # nominal single-device throughputs — only the RELATIVE magnitude
+        # across plans matters, and every plan shares these constants
+        flops_s, bytes_s = 1e12, 1e11
+        secs = (cost["flops_per_device"] / flops_s
+                + cost["bytes_per_device"] / bytes_s)
+        return max(float(secs), 1e-7)
+    except Exception:  # pragma: no cover - depends on jax build
+        return 1e-5 + 1e-9 * max(int(m_bucket), 1)
+
+
+def measured_wave_seconds(
+    policy, backend: str, n: int, wave: int
+) -> Optional[float]:
+    """Per-wave measured seconds from the tuned policy's NLCC route entry for
+    this (n, wave) shape bucket — the calibrated term of the cost model.
+    None when the policy never measured this bucket."""
+    if policy is None:
+        return None
+    from repro.kernels import registry
+
+    entry = policy.route_entry_for(
+        nlcc_mod.NLCC_ROUTE, backend, registry.shape_bucket(n, wave))
+    if entry is None or not entry.measured_s:
+        return None
+    return min(float(v) for v in entry.measured_s.values())
+
+
+class _CostModel:
+    """Predict seconds per phase. Calibration: measured per-wave seconds from
+    the policy table when available (assumed to time a reference-length hop
+    loop), else the HLO static term; frontier survival estimated from the
+    graph's label histogram + average degree, updated per phase by the
+    constraint's selectivity — the mechanism that rewards running selective
+    constraints first."""
+
+    REF_HOPS = 4.0  # measured NLCC route entries time ~length-4 walks
+    TDS_FACTOR = 2.0  # row joins move more bytes per token than bit-planes
+
+    def __init__(self, template: Template, stats: GraphStats, *,
+                 backend: str, wave: int, policy=None):
+        self.t = template
+        self.stats = stats
+        self.wave = max(int(wave), 1)
+        freq = np.asarray(stats.label_hist, dtype=np.float64)
+        need = int(template.labels.max()) + 1
+        if freq.size < need:
+            freq = np.concatenate([freq, np.zeros(need - freq.size)])
+        self.freq = freq
+        self.total = max(float(stats.n), 1.0)
+        self.avg_deg = max(float(stats.avg_degree), 1.0)
+        ws = measured_wave_seconds(policy, backend, stats.n, wave)
+        static = static_dispatch_seconds(
+            backend, wave, 1 << max(int(stats.m), 1).bit_length())
+        self.hop_s = (ws / self.REF_HOPS) if ws is not None else static
+        self.dispatch_s = static
+
+    def _f(self, q: int) -> float:
+        return float(self.freq[int(self.t.labels[q])]) / self.total
+
+    def phase_seconds(self, phase: PlanPhase, survival: float) -> float:
+        c = phase.constraint
+        if phase.engine == ENGINE_NLCC:
+            walks = nlcc_mod.expand_walks(c, phase.direction)
+            total = 0.0
+            for walk in walks:
+                src_est = self._f(walk[0]) * self.total * survival
+                n_waves = max(1.0, math.ceil(src_est / self.wave))
+                total += n_waves * (
+                    len(walk) * self.hop_s + self.dispatch_s)
+            return total
+        # TDS row join: rows grow along the walk; model total row volume as
+        # the token-message estimate and charge the heavier per-row constant
+        rows = self._f(c.walk[0]) * self.total * survival
+        volume = 0.0
+        for q in c.walk[1:]:
+            volume += rows
+            rows = rows * self.avg_deg * self._f(q)
+        n_chunks = max(1.0, volume / self.wave)
+        return self.TDS_FACTOR * n_chunks * self.hop_s + self.dispatch_s
+
+    def survival_after(self, phase: PlanPhase, survival: float) -> float:
+        c = phase.constraint
+        sel = estimate_constraint_selectivity(self.t, c, self.freq)
+        if phase.engine == ENGINE_NLCC:
+            ran = len(nlcc_mod.expand_walks(c, phase.direction))
+            full = len(nlcc_mod.expand_walks(c, "default"))
+            sel *= ran / max(full, 1)  # fewer walk checks eliminate less
+        return max(survival * (1.0 - sel), 0.01)
+
+    def plan_seconds(self, phases: Sequence[PlanPhase]
+                     ) -> Tuple[float, List[float]]:
+        survival, total, per = 1.0, 0.0, []
+        for p in phases:
+            s = self.phase_seconds(p, survival)
+            per.append(s)
+            total += s
+            survival = self.survival_after(p, survival)
+        return total, per
+
+
+# ---------------------------------------------------------------- enumeration
+def _phase_variants(c: NonLocalConstraint) -> List[PlanPhase]:
+    """Sound (engine, direction) variants of one non-complete constraint.
+    Every variant either runs a subset of the default walk checks (weaker,
+    sound) or a row join at least as strong as token passing (stronger,
+    sound) — exactness is restored by the pinned complete phase."""
+    if c.complete:
+        return [PlanPhase(c, ENGINE_TDS, "default")]
+    if c.kind in ("cycle", "path"):
+        variants = [PlanPhase(c, ENGINE_NLCC, "default")]
+        if c.is_cyclic:
+            variants.append(PlanPhase(c, ENGINE_NLCC, "head"))
+        else:
+            variants.append(PlanPhase(c, ENGINE_NLCC, "fwd"))
+            variants.append(PlanPhase(c, ENGINE_NLCC, "rev"))
+        return variants
+    # partial TDS: the row join is the default; token passing over the same
+    # walk is the cheap relaxation
+    return [PlanPhase(c, ENGINE_TDS, "default"),
+            PlanPhase(c, ENGINE_NLCC, "default")]
+
+
+def enumerate_orders(
+    model: _CostModel, constraints: Sequence[NonLocalConstraint]
+) -> List[List[NonLocalConstraint]]:
+    """Candidate orders of the non-complete prefix. Constraints with equal
+    (cost, selectivity) estimates are interchangeable — permuting within such
+    a class yields an equivalent plan, so only class orders are enumerated
+    (the symmetric-order pruning). Beyond MAX_ENUM_CLASSES classes the space
+    is sampled greedily: ascending cost-to-selectivity rank."""
+    prefix = list(constraints)
+    if not prefix:
+        return [[]]
+    key_of = {}
+    for c in prefix:
+        base = model.phase_seconds(
+            PlanPhase(c, default_engine(c), "default"), 1.0)
+        sel = estimate_constraint_selectivity(model.t, c, model.freq)
+        key_of[constraint_signature(c)] = (round(base, 9), round(sel, 9))
+    classes: Dict[tuple, List[NonLocalConstraint]] = {}
+    for c in prefix:
+        classes.setdefault(key_of[constraint_signature(c)], []).append(c)
+    keys = list(classes)
+    if len(keys) > MAX_ENUM_CLASSES:
+        # greedy: cheapest-per-unit-eliminated first, single candidate order
+        ranked = sorted(
+            keys, key=lambda k: (k[0] / max(k[1], 1e-9), k))
+        return [[c for k in ranked for c in classes[k]]]
+    orders = []
+    for perm in itertools.permutations(keys):
+        orders.append([c for k in perm for c in classes[k]])
+    return orders
+
+
+def _greedy_variants(
+    model: _CostModel,
+    order: Sequence[NonLocalConstraint],
+    last: PlanPhase,
+) -> Tuple[List[PlanPhase], float]:
+    """Pick the (engine, direction) variant per phase of a fixed order.
+    Greedy with one-step lookahead: phase costs are ~linear in frontier
+    survival, so a variant is scored by its own cost plus the default cost
+    of everything after it scaled by the survival it leaves behind — a weak
+    cheap variant that barely shrinks the frontier pays for itself downstream
+    and loses to the full-strength check where it should."""
+    rem_default: List[float] = []
+    acc = model.phase_seconds(last, 1.0)
+    for c in reversed(order):
+        rem_default.append(acc)
+        acc += model.phase_seconds(
+            PlanPhase(c, default_engine(c), "default"), 1.0)
+    rem_default.reverse()
+    survival, phases, cost = 1.0, [], 0.0
+    for i, c in enumerate(order):
+        best = None
+        for p in _phase_variants(c):
+            pc = model.phase_seconds(p, survival)
+            sa = model.survival_after(p, survival)
+            score = pc + sa * rem_default[i]
+            if best is None or score < best[0]:
+                best = (score, p, pc, sa)
+        _, p, pc, sa = best
+        phases.append(p)
+        cost += pc
+        survival = sa
+    phases.append(last)
+    cost += model.phase_seconds(last, survival)
+    return phases, cost
+
+
+def plan_query(
+    template: Template,
+    stats: GraphStats,
+    *,
+    backend: Optional[str] = None,
+    wave: int = 1024,
+    policy=None,
+    guarantee_precision: bool = True,
+    label_freq: Optional[np.ndarray] = None,
+    constraints: Optional[List[NonLocalConstraint]] = None,
+) -> QueryPlan:
+    """Enumerate sound plans, cost each, return the argmin.
+
+    When reordering is unsound (no pinned complete phase) the heuristic plan
+    comes back unchanged — `source == "heuristic"` — so callers can persist
+    or skip it. Per-phase variant choice is greedy under the current
+    survival estimate (the model is separable per phase given survival), and
+    order choice is exhaustive over distinct cost classes."""
+    if constraints is None:
+        constraints = generate_constraints(
+            template,
+            label_freq=(label_freq if label_freq is not None
+                        else stats.label_hist),
+            guarantee_precision=guarantee_precision,
+        )
+    base = heuristic_plan(constraints)
+    if backend is None:
+        backend = jax.default_backend()
+    model = _CostModel(template, stats, backend=backend, wave=wave,
+                       policy=policy)
+    if not reorder_is_sound(constraints):
+        base.predicted_s, base.per_phase_s = model.plan_seconds(base.phases)
+        return base
+    last = PlanPhase(constraints[-1], ENGINE_TDS, "default")
+    best_phases, best_cost = base.phases, None
+    for order in enumerate_orders(model, constraints[:-1]):
+        phases, cost = _greedy_variants(model, order, last)
+        if best_cost is None or cost < best_cost:
+            best_phases, best_cost = phases, cost
+    # the heuristic order itself is always in the candidate set via its cost
+    heur_cost, heur_per = model.plan_seconds(base.phases)
+    if best_cost is None or heur_cost <= best_cost:
+        base.predicted_s, base.per_phase_s = heur_cost, heur_per
+        return base
+    total, per = model.plan_seconds(best_phases)
+    return QueryPlan(phases=best_phases, predicted_s=float(total),
+                     source="planner", per_phase_s=per)
+
+
+# --------------------------------------------------------- policy round-trip
+def plan_to_entry(plan: QueryPlan, *,
+                  measured_s: Optional[Dict[str, float]] = None):
+    from repro.kernels.registry import PlanEntry
+
+    per = plan.per_phase_s or [0.0] * len(plan.phases)
+    return PlanEntry(
+        phases=[{"sig": p.signature, "engine": p.engine,
+                 "direction": p.direction, "predicted_s": float(s)}
+                for p, s in zip(plan.phases, per)],
+        predicted_s=float(plan.predicted_s),
+        measured_s=dict(measured_s or {}),
+    )
+
+
+def entry_to_plan(entry, constraints: Sequence[NonLocalConstraint]
+                  ) -> QueryPlan:
+    """Rehydrate a cached PlanEntry against the constraints the template
+    generates TODAY. Caller must have validated signatures match
+    (registry.resolve_plan does)."""
+    by_sig = {constraint_signature(c): c for c in constraints}
+    phases = [
+        PlanPhase(by_sig[str(p["sig"])],
+                  str(p.get("engine", ENGINE_NLCC)),
+                  str(p.get("direction", "default")))
+        for p in entry.phases
+    ]
+    return QueryPlan(
+        phases=phases, predicted_s=float(entry.predicted_s), source="policy",
+        per_phase_s=[float(p.get("predicted_s", 0.0)) for p in entry.phases])
+
+
+def record_plan(policy, template: Template, stats: GraphStats,
+                plan: QueryPlan, *, backend: str,
+                measured_s: Optional[Dict[str, float]] = None) -> None:
+    """Write `plan` into a DispatchPolicy's plan table (caller persists)."""
+    policy.set_plan(backend, plan_bucket(template, stats),
+                    plan_to_entry(plan, measured_s=measured_s))
+
+
+def resolve_query_plan(
+    template: Template,
+    constraints: Sequence[NonLocalConstraint],
+    stats: GraphStats,
+    *,
+    backend: Optional[str] = None,
+) -> Optional[QueryPlan]:
+    """The serving/pipeline lookup: the active policy's cached plan for this
+    (template, stats) bucket, validated against the current constraint
+    signatures and the soundness gate. None → run the heuristic order."""
+    from repro.kernels import registry
+
+    entry = registry.resolve_plan(
+        plan_bucket(template, stats),
+        [constraint_signature(c) for c in constraints],
+        backend=backend,
+    )
+    if entry is None:
+        return None
+    plan = entry_to_plan(entry, constraints)
+    if plan.is_heuristic():
+        return plan
+    if not (plan.phases and plan.phases[-1].constraint.complete):
+        # a non-default plan is sound only under the complete-last gate;
+        # a cache written by a buggy/foreign tool must not bypass it
+        return None
+    return plan

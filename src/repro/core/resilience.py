@@ -113,6 +113,15 @@ class ResilienceExhausted(RuntimeError):
     budget is spent. Carries the original failure as __cause__."""
 
 
+class PlanMismatch(RuntimeError):
+    """A checkpoint was written under a different query plan (different
+    constraint order / phase identity) than the recovering run executes.
+    Phase identity is keyed by constraint signature, not positional index —
+    replaying phase k of plan A inside plan B would re-run the WRONG
+    constraint and silently corrupt the trajectory, so recovery refuses
+    cleanly instead. Re-prune from scratch or restore the original plan."""
+
+
 # ---------------------------------------------------------------- fault specs
 # Ladder rungs in escalation order. A spec's `cleared_by` names the rung that
 # makes the fault stop firing — e.g. cleared_by="retry" simulates a hiccup

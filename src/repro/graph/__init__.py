@@ -15,6 +15,7 @@ from repro.graph.generators import (
 )
 from repro.graph.partition import EdgePartition, partition_graph
 from repro.graph.sampler import NeighborSampler
+from repro.graph.stats import GraphStats, collect_graph_stats
 from repro.graph import segment_ops
 
 __all__ = [
@@ -30,5 +31,7 @@ __all__ = [
     "EdgePartition",
     "partition_graph",
     "NeighborSampler",
+    "GraphStats",
+    "collect_graph_stats",
     "segment_ops",
 ]

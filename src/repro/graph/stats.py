@@ -1,0 +1,133 @@
+"""Cheap device-side graph statistics for plan-level query optimization.
+
+The planner (core/planner.py) costs candidate constraint orders with a
+survival model driven by two histograms: how many vertices carry each label
+(the selectivity of a label-candidacy test) and how degrees are distributed
+(the fan-out of a token-forwarding step). Both are computed on device in one
+fused dispatch and read back together — one host sync regardless of graph
+size — so collecting stats at admission time costs no more than a single
+count readback the pipeline already does per phase.
+
+Stats are summarised into a coarse *bucket* string (same spirit as
+`kernels.registry.shape_bucket`): plans are tuned per (template signature,
+stats bucket), so a plan tuned on one R-MAT instance transfers to any graph
+with the same rough scale, density, and label skew.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.graph.structs import DeviceGraph, Graph
+
+# log2-bucketed degree histogram width: bucket i holds vertices with
+# out-degree in [2^(i-1), 2^i), bucket 0 holds isolated vertices. 32 buckets
+# cover any int32-indexable graph.
+DEGREE_BUCKETS = 32
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Host-side summary of one readback: label + degree histograms."""
+
+    n: int
+    m: int
+    label_hist: np.ndarray  # int64[n_labels], count of vertices per label
+    degree_hist: np.ndarray  # int64[DEGREE_BUCKETS], log2-bucketed out-degree
+
+    @property
+    def n_labels(self) -> int:
+        return int(self.label_hist.shape[0])
+
+    @property
+    def avg_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    def label_frequency(self) -> np.ndarray:
+        """Alias matching `Graph.label_frequency` (the heuristic-order input)."""
+        return self.label_hist
+
+    def degree_p90(self) -> float:
+        """Upper edge of the bucket holding the 90th-percentile vertex degree."""
+        if self.n == 0:
+            return 0.0
+        cum = np.cumsum(self.degree_hist)
+        idx = int(np.searchsorted(cum, 0.9 * self.n))
+        return float(2 ** min(idx, DEGREE_BUCKETS - 1))
+
+    def label_skew(self) -> float:
+        """max/mean label frequency — 1.0 for uniform labels, large when one
+        label dominates (and label tests stop discriminating)."""
+        nz = self.label_hist[self.label_hist > 0]
+        if nz.size == 0:
+            return 1.0
+        return float(nz.max() / nz.mean())
+
+    def bucket(self) -> str:
+        """Coarse bucket key for the plan cache: power-of-two vertex count,
+        power-of-two average degree, power-of-two label-skew class. Renders
+        as e.g. ``n2048xd8xs2``."""
+        return "n%dxd%dxs%d" % (
+            _pow2(self.n),
+            _pow2(int(round(self.avg_degree))),
+            _pow2(int(round(self.label_skew()))),
+        )
+
+
+def _pow2(d: int) -> int:
+    d = max(int(d), 1)
+    b = 1
+    while b < d:
+        b <<= 1
+    return b
+
+
+def collect_graph_stats(
+    g: Union[Graph, DeviceGraph], n_labels: Optional[int] = None
+) -> GraphStats:
+    """Compute label + degree histograms in one device dispatch, one readback.
+
+    The two histograms are packed into a single flat int32 vector on device
+    and read back together, so cost is one host sync. Accepts the host Graph
+    too (numpy path) for callers that never built a DeviceGraph.
+    """
+    if isinstance(g, Graph):
+        nl = int(n_labels) if n_labels is not None else g.n_labels
+        label_hist = np.bincount(g.labels, minlength=max(nl, 1)).astype(np.int64)
+        deg = g.degrees()
+        buckets = np.where(deg > 0, np.ceil(np.log2(deg + 1)), 0).astype(np.int64)
+        buckets = np.clip(buckets, 0, DEGREE_BUCKETS - 1)
+        degree_hist = np.bincount(buckets, minlength=DEGREE_BUCKETS).astype(np.int64)
+        return GraphStats(n=g.n, m=g.m, label_hist=label_hist,
+                          degree_hist=degree_hist[:DEGREE_BUCKETS])
+
+    dg = g
+    if n_labels is None:
+        raise ValueError("n_labels is required for DeviceGraph stats "
+                         "(labels.max() would be an extra readback)")
+    nl = max(int(n_labels), 1)
+    packed = _device_histograms(dg.labels, dg.src, dg.n, nl)
+    flat = np.asarray(packed)  # the single readback
+    return GraphStats(
+        n=dg.n,
+        m=dg.m,
+        label_hist=flat[:nl].astype(np.int64),
+        degree_hist=flat[nl:nl + DEGREE_BUCKETS].astype(np.int64),
+    )
+
+
+def _device_histograms(labels: jnp.ndarray, src: jnp.ndarray, n: int, nl: int):
+    """Fused label histogram + log2 degree histogram → one flat int32 vector."""
+    label_hist = jnp.zeros((nl,), dtype=jnp.int32).at[labels].add(1)
+    deg = jnp.zeros((n,), dtype=jnp.int32).at[src].add(1)
+    buckets = jnp.where(
+        deg > 0,
+        jnp.ceil(jnp.log2(deg.astype(jnp.float32) + 1.0)).astype(jnp.int32),
+        0,
+    )
+    buckets = jnp.clip(buckets, 0, DEGREE_BUCKETS - 1)
+    degree_hist = jnp.zeros((DEGREE_BUCKETS,), dtype=jnp.int32).at[buckets].add(1)
+    return jnp.concatenate([label_hist, degree_hist])

@@ -53,7 +53,7 @@ import json
 import os
 import time
 import warnings
-from typing import Any, Callable, Dict, Iterable, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 
@@ -208,6 +208,44 @@ class PolicyEntry:
         )
 
 
+@dataclasses.dataclass
+class PlanEntry:
+    """One tuned *query plan* for a (template-signature, graph-stats) bucket:
+    the ordered constraint phases — each a dict with the constraint signature
+    (``"cycle:0,1,2,0"``), the engine choice (``"nlcc"``/``"tds"``), and the
+    walk-direction choice (``"default"``/``"fwd"``/``"rev"``/``"head"``) —
+    plus the cost model's prediction and any measured comparison."""
+
+    phases: List[Dict] = dataclasses.field(default_factory=list)
+    predicted_s: float = 0.0
+    measured_s: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def signatures(self) -> List[str]:
+        return [str(p["sig"]) for p in self.phases]
+
+    def to_json(self) -> Dict:
+        return {
+            "phases": self.phases,
+            "predicted_s": self.predicted_s,
+            "measured_s": self.measured_s,
+        }
+
+    @staticmethod
+    def from_json(d: Dict) -> "PlanEntry":
+        phases = [dict(p) for p in d["phases"]]
+        for p in phases:
+            p["sig"]  # KeyError on malformed phase → entry skipped by caller
+        return PlanEntry(
+            phases=phases,
+            predicted_s=float(d.get("predicted_s", 0.0)),
+            measured_s={k: float(v) for k, v in d.get("measured_s", {}).items()},
+        )
+
+
+# The single plan-table route name: plan keys render as
+# ``prune.plan|<backend>|<template-sig>x<stats-bucket>``.
+PLAN_ROUTE = "prune.plan"
+
 POLICY_SCHEMA_VERSION = 1
 
 
@@ -223,6 +261,7 @@ class DispatchPolicy:
 
     modes: Dict[str, PolicyEntry] = dataclasses.field(default_factory=dict)
     routes: Dict[str, PolicyEntry] = dataclasses.field(default_factory=dict)
+    plans: Dict[str, PlanEntry] = dataclasses.field(default_factory=dict)
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     # -- lookup
@@ -254,6 +293,12 @@ class DispatchPolicy:
         read measurements back out (benchmarks, roll-ups)."""
         return self._lookup(self.routes, name, backend, bucket)
 
+    def plan_for(self, backend: str, bucket) -> Optional["PlanEntry"]:
+        """Tuned plan for a (template-sig, stats-bucket) bucket — exact key
+        only: a plan never transfers across templates or graph-stats classes,
+        so there is no wildcard fallback."""
+        return self.plans.get(_entry_key(PLAN_ROUTE, backend, bucket))
+
     # -- mutation
     def set_mode(self, name: str, backend: str, bucket, choice: str,
                  measured_s: Optional[Dict[str, float]] = None):
@@ -267,14 +312,22 @@ class DispatchPolicy:
         self.routes[_entry_key(name, backend, bucket)] = PolicyEntry(
             choice, dict(measured_s or {}))
 
+    def set_plan(self, backend: str, bucket, entry: "PlanEntry"):
+        self.plans[_entry_key(PLAN_ROUTE, backend, bucket)] = entry
+
     # -- persistence
     def to_json(self) -> Dict:
-        return {
+        out = {
             "schema_version": POLICY_SCHEMA_VERSION,
             "meta": self.meta,
             "modes": {k: e.to_json() for k, e in sorted(self.modes.items())},
             "routes": {k: e.to_json() for k, e in sorted(self.routes.items())},
         }
+        if self.plans:
+            # additive field: a pre-plan reader's from_json ignores unknown
+            # keys, so schema_version stays 1
+            out["plans"] = {k: e.to_json() for k, e in sorted(self.plans.items())}
+        return out
 
     @staticmethod
     def from_json(d: Dict) -> "DispatchPolicy":
@@ -284,9 +337,21 @@ class DispatchPolicy:
                 f"dispatch policy schema_version {ver!r} != "
                 f"{POLICY_SCHEMA_VERSION}; re-run registry.tune()"
             )
+        plans: Dict[str, PlanEntry] = {}
+        for k, e in d.get("plans", {}).items():
+            try:
+                plans[k] = PlanEntry.from_json(e)
+            except (KeyError, TypeError, ValueError) as err:
+                # a malformed plan entry must not take down the mode/route
+                # tables it rides along with — skip just the entry
+                warnings.warn(
+                    f"ignoring malformed plan cache entry {k!r}: {err}",
+                    RuntimeWarning, stacklevel=2,
+                )
         return DispatchPolicy(
             modes={k: PolicyEntry.from_json(e) for k, e in d.get("modes", {}).items()},
             routes={k: PolicyEntry.from_json(e) for k, e in d.get("routes", {}).items()},
+            plans=plans,
             meta=dict(d.get("meta", {})),
         )
 
@@ -457,6 +522,40 @@ def resolve_route(
         if choice is not None and (allowed is None or choice in allowed):
             return choice
     return default
+
+
+def resolve_plan(
+    bucket,
+    signatures: Sequence[str],
+    *,
+    backend: Optional[str] = None,
+) -> Optional[PlanEntry]:
+    """Tuned query plan for a (template-sig, stats-bucket) bucket, validated
+    against the constraint signatures the template *currently* generates.
+
+    Returns None (→ caller uses the paper's heuristic order) when there is no
+    active policy, the policy has no plan for this bucket, or the cached plan
+    is *stale*: its phase-signature multiset no longer matches `signatures`
+    (the template changed, or constraint generation itself changed). Stale
+    entries are ignored with a warning rather than half-applied — a plan that
+    drops or invents a constraint is unsound, not just slow."""
+    policy = get_policy()
+    if policy is None or not policy.plans:
+        return None
+    be = backend or jax.default_backend()
+    entry = policy.plan_for(be, bucket)
+    if entry is None:
+        return None
+    if sorted(entry.signatures()) != sorted(str(s) for s in signatures):
+        warnings.warn(
+            f"ignoring stale plan cache entry for bucket "
+            f"{_bucket_key(bucket)!r}: cached constraint signatures "
+            f"{sorted(entry.signatures())} != current "
+            f"{sorted(str(s) for s in signatures)}; re-run the planner",
+            RuntimeWarning, stacklevel=2,
+        )
+        return None
+    return entry
 
 
 def dispatch(

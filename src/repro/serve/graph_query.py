@@ -59,6 +59,11 @@ class GraphQuery:
     deadline: Optional[float]  # absolute clock() time, None = no deadline
     submitted_at: float
     bucket: tuple
+    # plan identity resolved AT ADMISSION: batched lanes must share a batch
+    # only with same-plan queries (the lockstep driver handles mixed plans,
+    # but grouping by plan keeps wave shapes aligned). "heuristic" when the
+    # policy holds no tuned plan for this (template, graph-stats) bucket.
+    plan_group: str = "heuristic"
 
 
 @dataclasses.dataclass
@@ -96,6 +101,7 @@ class GraphQueryEngine:
         self.clock = clock
         self.prune_kw = prune_kw
         self._label_freq = graph.label_frequency()
+        self._gstats = None  # graph stats, computed once iff plans are tuned
         self._queue: deque = deque()
         self._done: Dict[int, QueryResult] = {}
         self._ids = itertools.count()
@@ -125,10 +131,36 @@ class GraphQueryEngine:
         q = GraphQuery(
             query_id=next(self._ids), template=template, mode=mode,
             deadline=(now + timeout_s) if timeout_s is not None else None,
-            submitted_at=now, bucket=registry.shape_bucket(template.n0))
+            submitted_at=now, bucket=registry.shape_bucket(template.n0),
+            plan_group=self._plan_group(template))
         self._queue.append(q)
         self.stats["n_submitted"] += 1
         return q.query_id
+
+    def _plan_group(self, template: Template) -> str:
+        """Plan lookup at admission: the planned phase order identifies the
+        batch group. Untuned (no plans in the active policy) every query is
+        "heuristic" — grouping, and therefore batching behavior, is exactly
+        the pre-planner shape-bucket-only rule."""
+        from repro.kernels import registry
+
+        policy = registry.get_policy()
+        if policy is None or not policy.plans:
+            return "heuristic"
+        from repro.core import planner
+        from repro.core.template import generate_constraints
+        from repro.graph.stats import collect_graph_stats
+
+        if self._gstats is None:
+            self._gstats = collect_graph_stats(self.graph)
+        cs = generate_constraints(
+            template, label_freq=self._label_freq,
+            guarantee_precision=self.prune_kw.get(
+                "guarantee_precision", True))
+        qp = planner.resolve_query_plan(template, cs, self._gstats)
+        if qp is None or qp.is_heuristic():
+            return "heuristic"
+        return ";".join(qp.identities())
 
     @property
     def n_pending(self) -> int:
@@ -156,8 +188,10 @@ class GraphQueryEngine:
         max_wait_s (or the caller is draining)."""
         now = self.clock()
         groups: Dict[tuple, List[GraphQuery]] = {}
-        for q in self._queue:  # FIFO within a bucket by construction
-            groups.setdefault(q.bucket, []).append(q)
+        for q in self._queue:  # FIFO within a group by construction
+            # lanes batch by (shape bucket, plan group): same-plan queries
+            # share wave shapes; untuned this degenerates to bucket-only
+            groups.setdefault((q.bucket, q.plan_group), []).append(q)
         for bucket, qs in groups.items():
             full = len(qs) >= self.max_batch
             overdue = (now - qs[0].submitted_at) >= self.max_wait_s

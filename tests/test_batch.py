@@ -151,3 +151,34 @@ def test_batched_route_resolution_uses_batch_bucket():
     bucket = bres.stats["batched"]["bucket"]
     assert bucket.startswith("b2x")
     assert bres.stats["dispatch_routes"]["prune.nlcc"] != "none"
+
+
+# --------------------------------------------- shared candidacy planes
+def test_shared_candidacy_plane_prefix_parity():
+    """Lane init builds ONE candidacy plane per DISTINCT label and assembles
+    every lane's omega columns from those shared planes — with heavy label
+    overlap across the batch the plane count collapses well below the column
+    count, and the assembled init must stay bit-identical to the per-lane
+    construction (pinned through full-prune lane parity)."""
+    g = _graph()
+    # 4 lanes x 4 columns = 16 columns over only 4 distinct labels
+    templates = [
+        Template([5, 4, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+        Template([4, 5, 3, 4], [(0, 1), (1, 2), (2, 3), (3, 0)]),
+        Template([3, 4, 5, 2], [(0, 1), (1, 2), (2, 3)]),
+        Template([2, 3, 4, 5], [(0, 1), (1, 2), (2, 3)]),
+    ]
+    bres = prune_batch(g, templates)
+    planes = bres.stats["shared_candidacy_planes"]
+    assert planes["distinct"] == 4
+    assert planes["lane_columns"] == 16
+    _assert_lane_parity(bres, templates, g)
+
+
+def test_shared_candidacy_planes_sharded():
+    g = _graph()
+    templates = _variants()[:4]
+    bres = prune_batch(g, templates, partition=4)
+    planes = bres.stats["shared_candidacy_planes"]
+    assert planes["distinct"] <= planes["lane_columns"]
+    _assert_lane_parity(bres, templates, g, partition=4)

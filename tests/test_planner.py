@@ -1,0 +1,436 @@
+"""Plan-level query optimizer (core/planner.py): plan enumeration, the
+calibrated cost model, and — the load-bearing contract — BIT-IDENTITY of
+planned execution against the heuristic order.
+
+Soundness recap (full argument in core/planner.py): every phase is reductive
+and monotone, and the final complete edge-cover TDS walk maps ANY sound
+superset to the exact match set, with the trailing conditional-LCC fixpoint
+making the edge mask a pure function of the final omega. Therefore any plan
+that keeps the complete TDS phase last produces a PruneResult bit-identical
+to the heuristic order — which these tests pin across backends and plans.
+
+Also here: checkpoint phase identity (satellite). Checkpoints key phases by
+constraint signature + engine + direction, not positional index; resuming
+under a different plan must refuse cleanly with PlanMismatch.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import (Template, prune, count_matches, PlanMismatch,
+                        plan_query, heuristic_plan, resolve_query_plan,
+                        record_plan, constraint_signature, template_signature,
+                        plan_bucket)
+from repro.core import planner
+from repro.core import nlcc as nlcc_mod
+from repro.core import resilience as res
+from repro.core.template import generate_constraints
+from repro.graph import generators as gen
+from repro.graph import collect_graph_stats
+from repro.graph.structs import Graph, DeviceGraph
+from repro.kernels import registry
+
+
+# ------------------------------------------------------------- fixtures
+def _graph():
+    """R-MAT background with 3 planted labeled squares: non-trivial pruning
+    with a known non-empty match set."""
+    pattern = Graph.from_undirected_pairs(
+        4, [(0, 1), (1, 2), (2, 3), (3, 0)], [2, 3, 4, 3])
+    bg = gen.rmat_graph(8, edge_factor=4, seed=3, labeler="random",
+                        n_labels=6)
+    return gen.planted_pattern_graph(bg, pattern, n_copies=3, seed=5)
+
+
+def _template():
+    return Template([2, 3, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)])
+
+
+def _multi_constraint_template():
+    """Square + chord + tail: generates several cycle/path constraints plus
+    the complete TDS — a real reordering space."""
+    return Template([2, 3, 4, 3, 5],
+                    [(0, 1), (1, 2), (2, 3), (3, 0), (0, 2), (2, 4)])
+
+
+def _constraints(g, t, **kw):
+    return generate_constraints(t, label_freq=g.label_frequency(), **kw)
+
+
+def _assert_bit_identical(a, b, what):
+    np.testing.assert_array_equal(
+        np.asarray(a.state.omega), np.asarray(b.state.omega),
+        err_msg=f"{what}: omega differs")
+    np.testing.assert_array_equal(
+        np.asarray(a.state.edge_active), np.asarray(b.state.edge_active),
+        err_msg=f"{what}: edge mask differs")
+    ca = count_matches(a.dg, a.state, a.template)
+    cb = count_matches(b.dg, b.state, b.template)
+    assert ca.n_embeddings == cb.n_embeddings, f"{what}: match counts"
+
+
+# ------------------------------------------------------------- signatures
+def test_constraint_and_template_signatures():
+    g, t = _graph(), _template()
+    cs = _constraints(g, t)
+    sigs = [constraint_signature(c) for c in cs]
+    assert len(set(sigs)) == len(sigs)  # distinct phases -> distinct keys
+    for c, s in zip(cs, sigs):
+        assert s.startswith(f"{c.kind}:")
+        assert s.endswith(":complete") == c.complete
+    tsig = template_signature(t)
+    assert tsig == template_signature(
+        Template(t.labels, sorted(t.edge_set)[::-1]))
+    assert tsig != template_signature(_multi_constraint_template())
+
+
+def test_plan_bucket_is_template_x_graph_stats():
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    tsig, sbucket = plan_bucket(t, st)
+    assert tsig == template_signature(t)
+    assert sbucket == st.bucket()
+
+
+# ------------------------------------------------------------- graph stats
+def test_graph_stats_device_path_matches_host_path():
+    g = _graph()
+    host = collect_graph_stats(g)
+    dev = collect_graph_stats(DeviceGraph.from_host(g),
+                              n_labels=len(g.label_frequency()))
+    assert host.n == dev.n and host.m == dev.m
+    np.testing.assert_array_equal(host.label_hist, dev.label_hist)
+    np.testing.assert_array_equal(host.degree_hist, dev.degree_hist)
+    assert host.bucket() == dev.bucket()
+
+
+def test_graph_stats_device_path_requires_n_labels():
+    dg = DeviceGraph.from_host(_graph())
+    with pytest.raises(ValueError, match="n_labels"):
+        collect_graph_stats(dg)
+
+
+# ------------------------------------------------------------- expand_walks
+def test_expand_walks_directions_partition_the_default():
+    g, t = _graph(), _multi_constraint_template()
+    for c in _constraints(g, t):
+        default = nlcc_mod.expand_walks(c, "default")
+        assert nlcc_mod.expand_walks(c) == default
+        for d in ("fwd", "rev", "head"):
+            sub = nlcc_mod.expand_walks(c, d)
+            assert sub, f"{d} produced no walks"
+            for w in sub:
+                # a variant walk is either one of the default walks or (for
+                # the cycle "rev" orientation flip) the element-wise reversal
+                # of one — the same closed cycle in an undirected graph
+                assert w in default or tuple(reversed(w)) in default, (
+                    f"direction {d} walk {w} unrelated to the default set — "
+                    "direction variants must weaken, never change, the phase")
+
+
+def test_expand_walks_cycle_rotations():
+    c = [c for c in _constraints(_graph(), _template()) if c.is_cyclic][0]
+    base = c.walk[:-1]
+    assert len(nlcc_mod.expand_walks(c, "default")) == len(base)
+    assert len(nlcc_mod.expand_walks(c, "head")) == 1
+    rev = nlcc_mod.expand_walks(c, "rev")[0]
+    assert rev[0] == rev[-1]  # still closed
+
+
+# ------------------------------------------------------------- plan shape
+def test_heuristic_plan_mirrors_generate_constraints_order():
+    g, t = _graph(), _multi_constraint_template()
+    cs = _constraints(g, t)
+    hp = heuristic_plan(cs)
+    assert hp.source == "heuristic"
+    assert [p.constraint for p in hp.phases] == list(cs)
+    assert all(p.is_default() for p in hp.phases)
+
+
+def test_reorder_is_sound_requires_complete_tds_last():
+    g = _graph()
+    cs = _constraints(g, _multi_constraint_template())
+    assert planner.reorder_is_sound(cs)
+    no_precision = _constraints(g, _multi_constraint_template(),
+                                guarantee_precision=False)
+    if no_precision and not no_precision[-1].complete:
+        assert not planner.reorder_is_sound(no_precision)
+    assert not planner.reorder_is_sound([])
+
+
+def test_plan_query_covers_exactly_the_constraints():
+    g, t = _graph(), _multi_constraint_template()
+    st = collect_graph_stats(g)
+    qp = plan_query(t, st, backend="cpu")
+    cs = _constraints(g, t)
+    assert sorted(qp.signatures()) == sorted(
+        constraint_signature(c) for c in cs)
+    # the complete TDS phase is pinned last — the soundness gate
+    assert qp.phases[-1].constraint.complete
+    assert qp.phases[-1].engine == planner.ENGINE_TDS
+    assert qp.predicted_s > 0
+    assert qp.per_phase_s is not None and len(qp.per_phase_s) == len(qp.phases)
+
+
+def test_plan_query_without_complete_tds_stays_heuristic():
+    """Reordering is gated on the complete edge-cover TDS phase being
+    present and last; without it (guarantee_precision=False on a cyclic
+    template) the planner must return the heuristic order untouched."""
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    cs = _constraints(g, t, guarantee_precision=False)
+    if any(c.complete for c in cs):
+        pytest.skip("template generates a complete phase even without "
+                    "guarantee_precision")
+    qp = plan_query(t, st, backend="cpu", guarantee_precision=False,
+                    label_freq=g.label_frequency(), constraints=cs)
+    assert qp.is_heuristic()
+    assert [p.constraint for p in qp.phases] == list(cs)
+
+
+def test_phase_identity_includes_engine_and_direction():
+    g = _graph()
+    cs = _constraints(g, _template())
+    hp = heuristic_plan(cs)
+    p = hp.phases[0]
+    alt = planner.PlanPhase(p.constraint, p.engine, "head")
+    assert p.signature == alt.signature
+    assert p.identity != alt.identity
+
+
+# ------------------------------------------------------------- cost model
+def test_static_dispatch_seconds_positive_and_cached():
+    a = planner.static_dispatch_seconds("cpu", 1024, 2048)
+    b = planner.static_dispatch_seconds("cpu", 1024, 2048)
+    assert a > 0 and a == b
+
+
+def test_cost_model_orders_by_walk_volume():
+    """More walks on the same frontier must never be predicted cheaper."""
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    cs = _constraints(g, t)
+    model = planner._CostModel(t, st, backend="cpu", wave=1024)
+    cyc = [c for c in cs if c.is_cyclic][0]
+    full = model.phase_seconds(
+        planner.PlanPhase(cyc, planner.ENGINE_NLCC, "default"), 1.0)
+    head = model.phase_seconds(
+        planner.PlanPhase(cyc, planner.ENGINE_NLCC, "head"), 1.0)
+    assert full >= head > 0
+
+
+def test_enumerate_orders_includes_heuristic_and_caps():
+    g, t = _graph(), _multi_constraint_template()
+    st = collect_graph_stats(g)
+    cs = _constraints(g, t)
+    model = planner._CostModel(t, st, backend="cpu", wave=1024)
+    prefix = [c for c in cs if not c.complete]  # caller pins complete last
+    orders = planner.enumerate_orders(model, prefix)
+    assert orders
+    assert all(sorted(constraint_signature(c) for c in o)
+               == sorted(constraint_signature(c) for c in prefix)
+               for o in orders)  # permutations only — nothing dropped
+    assert any(list(o) == list(prefix) for o in orders)  # heuristic included
+    assert len(orders) <= 720  # MAX_ENUM_CLASSES! ceiling
+
+
+# --------------------------------------------------- bit-identity pins
+# The acceptance contract: planned and heuristic orders produce bit-identical
+# PruneResults on every backend. local = single device; sim P in {1,4} =
+# vmap-simulated shards; spmd = shard_map on a real mesh (skipped when the
+# process has fewer devices than shards).
+def _backends():
+    out = [("local", dict()), ("sim-P1", dict(partition=1)),
+           ("sim-P4", dict(partition=4))]
+    return out
+
+
+@pytest.mark.parametrize("name,kw", _backends(), ids=lambda v: v[0]
+                         if isinstance(v, str) else "")
+def test_planned_vs_heuristic_bit_identical(name, kw):
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    qp = plan_query(t, st, backend="cpu")
+    base = prune(g, t, **kw)
+    planned = prune(g, t, plan=qp, **kw)
+    assert base.stats["plan"]["source"] == "heuristic"
+    assert planned.stats["plan"]["source"] in ("planner", "heuristic")
+    _assert_bit_identical(base, planned, f"{name} planned-vs-heuristic")
+
+
+@pytest.mark.parametrize("P", [1, 4])
+def test_planned_vs_heuristic_bit_identical_spmd(P):
+    if len(jax.devices()) < P:
+        pytest.skip(f"spmd P={P} needs {P} devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    from repro.launch.mesh import make_shard_mesh
+
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    qp = plan_query(t, st, backend="cpu")
+    mesh = make_shard_mesh(P)
+    base = prune(g, t, mesh=mesh)
+    planned = prune(g, t, plan=qp, mesh=mesh)
+    assert base.stats["backend"] == "spmd"
+    _assert_bit_identical(base, planned, f"spmd P={P} planned-vs-heuristic")
+
+
+def test_every_enumerable_plan_is_bit_identical():
+    """Stronger than the argmin pin: EVERY order/variant the planner may
+    emit lands on the same bits — permuted phases, direction subsets, and
+    the complete TDS pinned last."""
+    g, t = _graph(), _multi_constraint_template()
+    cs = _constraints(g, t)
+    assert planner.reorder_is_sound(cs)
+    base = prune(g, t)
+    head, last = list(cs[:-1]), cs[-1]
+    variants = [
+        list(cs),                         # heuristic order
+        head[::-1] + [last],              # reversed prefix
+    ]
+    for order in variants:
+        for direction in ("default", "head", "fwd"):
+            phases = [planner.PlanPhase(
+                c, planner.default_engine(c),
+                direction if not c.complete else "default")
+                for c in order]
+            qp = planner.QueryPlan(phases=phases, source="planner")
+            out = prune(g, t, plan=qp)
+            _assert_bit_identical(
+                base, out, f"order={[c.kind for c in order]} dir={direction}")
+
+
+def test_plan_stats_report_predicted_vs_actual():
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    qp = plan_query(t, st, backend="cpu")
+    out = prune(g, t, plan=qp)
+    rep = out.stats["plan"]
+    assert rep["source"] == qp.source
+    assert len(rep["phases"]) == len(qp.phases)
+    for ph, p in zip(rep["phases"], qp.phases):
+        assert ph["sig"] == p.signature
+        assert ph["engine"] == p.engine and ph["direction"] == p.direction
+        assert ph["actual_s"] is not None and ph["actual_s"] >= 0
+        if qp.source == "planner":
+            assert ph["predicted_s"] is not None and ph["predicted_s"] > 0
+
+
+def test_mismatched_plan_is_rejected():
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    other = plan_query(_multi_constraint_template(), st, backend="cpu")
+    with pytest.raises(ValueError, match="does not match"):
+        prune(g, t, plan=other)
+
+
+# --------------------------------------------------- policy-cache resolve
+def test_record_and_resolve_roundtrip():
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    cs = _constraints(g, t)
+    pol = registry.DispatchPolicy()
+    qp = plan_query(t, st, backend="cpu", policy=pol)
+    record_plan(pol, t, st, qp, backend="cpu")
+    registry.set_policy(pol)
+    got = resolve_query_plan(t, cs, st, backend="cpu")
+    assert got is not None
+    assert got.source == "policy"
+    assert got.identities() == qp.identities()
+    # a different stats bucket misses (exact-key lookup, no wildcard)
+    bigger = gen.rmat_graph(10, edge_factor=8, seed=1, labeler="random",
+                            n_labels=6)
+    st2 = collect_graph_stats(bigger)
+    assert st2.bucket() != st.bucket()
+    assert resolve_query_plan(t, cs, st2, backend="cpu") is None
+
+
+def test_tuned_policy_drives_prune_and_stays_bit_identical():
+    g, t = _graph(), _template()
+    st = collect_graph_stats(g)
+    base = prune(g, t)  # untuned run under the autouse empty policy
+    pol = registry.DispatchPolicy()
+    qp = plan_query(t, st, backend="cpu", policy=pol)
+    record_plan(pol, t, st, qp, backend="cpu")
+    registry.set_policy(pol)
+    tuned = prune(g, t)
+    assert tuned.stats["plan"]["source"] == "policy"
+    _assert_bit_identical(base, tuned, "policy-cache-driven prune")
+
+
+# --------------------------------------------------- checkpoint identity
+def test_checkpoint_resume_under_different_order_refuses(tmp_path):
+    g, t = _graph(), _multi_constraint_template()
+    cs = _constraints(g, t)
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    prune(g, t, resilience=cfg)
+    # same constraints, different order — plan identity differs
+    alt = planner.QueryPlan(
+        phases=[planner.PlanPhase(c, planner.default_engine(c))
+                for c in (list(cs[:-1])[::-1] + [cs[-1]])],
+        source="planner")
+    inj = res.FaultInjector(
+        [res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg2 = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    with pytest.raises(PlanMismatch, match="written under plan"):
+        prune(g, t, resilience=cfg2, plan=alt)
+
+
+def test_checkpoint_resume_under_different_direction_refuses(tmp_path):
+    """Identity is signature + engine + direction: the same constraint order
+    executed with a weaker direction commits different state."""
+    g, t = _graph(), _template()
+    cs = _constraints(g, t)
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    prune(g, t, resilience=cfg)
+    hp = heuristic_plan(cs)
+    alt = planner.QueryPlan(
+        phases=[planner.PlanPhase(
+            p.constraint, p.engine,
+            "head" if p.engine == planner.ENGINE_NLCC else p.direction)
+            for p in hp.phases],
+        source="planner")
+    inj = res.FaultInjector(
+        [res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg2 = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    with pytest.raises(PlanMismatch):
+        prune(g, t, resilience=cfg2, plan=alt)
+
+
+def test_checkpoint_resume_under_same_plan_recovers_bit_identical(tmp_path):
+    g, t = _graph(), _template()
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    base = prune(g, t, resilience=cfg)
+    inj = res.FaultInjector(
+        [res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg2 = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    out = prune(g, t, resilience=cfg2)
+    assert [r["restored_phase"]
+            for r in out.stats["resilience"]["restarts"]]
+    _assert_bit_identical(base, out, "same-plan checkpoint resume")
+
+
+def test_legacy_checkpoint_without_plan_fields_resumes(tmp_path):
+    """Checkpoints written before plan identity existed (no phase_sig /
+    plan_sigs in meta) fall back to the positional rule instead of
+    refusing."""
+    from repro.checkpoint import ckpt
+
+    g, t = _graph(), _template()
+    cfg = res.ResilienceConfig(checkpoint_dir=str(tmp_path))
+    base = prune(g, t, resilience=cfg)
+    # rewrite the newest checkpoint's meta with the plan fields stripped
+    like = {"omega": np.zeros(base.omega.shape, bool),
+            "edge_active": np.zeros(base.edge_mask.shape, bool)}
+    tree, meta = ckpt.restore_checkpoint(str(tmp_path), like)
+    legacy = {k: v for k, v in meta.items()
+              if k not in ("phase_sig", "plan_sigs")}
+    ckpt.save_checkpoint(str(tmp_path), int(meta["phase"]) + 1,
+                         tree, extra_meta=dict(legacy, phase=int(
+                             meta["phase"])), keep=1)
+    inj = res.FaultInjector(
+        [res.FaultSpec(kind=res.FAULT_SHARD_LOSS, phase=1)])
+    cfg2 = res.ResilienceConfig(checkpoint_dir=str(tmp_path), injector=inj)
+    out = prune(g, t, resilience=cfg2)
+    _assert_bit_identical(base, out, "legacy checkpoint resume")

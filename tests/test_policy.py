@@ -484,3 +484,109 @@ def test_rollup_schema_violations_are_rejected(tmp_path, mutate, match):
     mutate(payload)
     with pytest.raises(ValueError, match=match):
         bench_common.validate_rollup(payload)
+
+
+# --------------------------------------------------------------- plan cache
+def _plan_setup():
+    """Planted-square graph + template with a tuned plan recorded for its
+    exact (template-sig, graph-stats) bucket."""
+    from repro.core import plan_query, record_plan
+    from repro.core.template import generate_constraints
+    from repro.graph import collect_graph_stats
+    from repro.graph.structs import Graph
+
+    pattern = Graph.from_undirected_pairs(
+        4, [(0, 1), (1, 2), (2, 3), (3, 0)], [2, 3, 4, 3])
+    bg = gen.rmat_graph(7, edge_factor=4, seed=3, labeler="random",
+                        n_labels=6)
+    g = gen.planted_pattern_graph(bg, pattern, n_copies=2, seed=5)
+    tmpl = Template([2, 3, 4, 3], [(0, 1), (1, 2), (2, 3), (3, 0)])
+    st = collect_graph_stats(g)
+    cs = generate_constraints(tmpl, label_freq=g.label_frequency())
+    pol = registry.DispatchPolicy()
+    qp = plan_query(tmpl, st, backend="cpu", policy=pol)
+    record_plan(pol, tmpl, st, qp, backend="cpu")
+    return g, tmpl, st, cs, pol, qp
+
+
+def test_untuned_policy_runs_heuristic_plan():
+    """Zero-overhead rule: an active policy with routes but NO plans must
+    leave prune on the heuristic order without ever touching graph stats."""
+    g, tmpl, st, cs, _, _ = _plan_setup()
+    pol = registry.DispatchPolicy()  # routes only, plans empty
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                  registry.ROUTE_PACKED)
+    registry.set_policy(pol)
+    out = prune(g, tmpl)
+    assert out.stats["plan"]["source"] == "heuristic"
+    from repro.core import planner
+    assert registry.resolve_plan(planner.plan_bucket(tmpl, st),
+                                 [planner.constraint_signature(c)
+                                  for c in cs]) is None
+
+
+def test_plan_entry_json_roundtrip(tmp_path):
+    _, tmpl, st, cs, pol, qp = _plan_setup()
+    path = str(tmp_path / "plans.json")
+    pol.save(path)
+    reloaded = registry.DispatchPolicy.load(path)
+    assert reloaded.to_json() == pol.to_json()
+    [key] = [k for k in reloaded.plans]
+    entry = reloaded.plans[key]
+    assert entry.signatures() == qp.signatures()
+    assert entry.predicted_s == pytest.approx(qp.predicted_s)
+    # a plan-free policy omits the additive "plans" field entirely
+    assert "plans" not in registry.DispatchPolicy().to_json()
+
+
+def test_stale_plan_signature_ignored_with_warning():
+    """A cached plan whose constraint signatures no longer match what the
+    template generates (constraint generation changed) is ignored — with a
+    warning — and prune falls back to the heuristic order."""
+    from repro.core import planner
+
+    g, tmpl, st, cs, pol, _ = _plan_setup()
+    [key] = list(pol.plans)
+    for p in pol.plans[key].phases:
+        p["sig"] = p["sig"] + ":v999"  # no longer generated by anything
+    registry.set_policy(pol)
+    sigs = [planner.constraint_signature(c) for c in cs]
+    with pytest.warns(RuntimeWarning, match="stale plan cache entry"):
+        got = registry.resolve_plan(planner.plan_bucket(tmpl, st), sigs)
+    assert got is None
+    with pytest.warns(RuntimeWarning, match="stale plan cache entry"):
+        out = prune(g, tmpl)
+    assert out.stats["plan"]["source"] == "heuristic"
+
+
+def test_malformed_plan_cache_entry_skipped_with_warning(tmp_path):
+    """One corrupt plan entry must not take down the whole policy: it is
+    skipped with a warning; routes/modes and intact plans still load."""
+    _, _, _, _, pol, _ = _plan_setup()
+    pol.set_route(LCC_ROUTE, "cpu", registry.BUCKET_ANY,
+                  registry.ROUTE_PACKED)
+    payload = pol.to_json()
+    [key] = list(payload["plans"])
+    payload["plans"]["prune.plan|cpu|brokenxbucket"] = {
+        "phases": [{"engine": "nlcc"}]}  # no "sig" — malformed
+    with pytest.warns(RuntimeWarning, match="malformed plan cache entry"):
+        reloaded = registry.DispatchPolicy.from_json(payload)
+    assert key in reloaded.plans  # the intact entry survived
+    assert "prune.plan|cpu|brokenxbucket" not in reloaded.plans
+    assert f"{LCC_ROUTE}|cpu|{registry.BUCKET_ANY}" in reloaded.routes
+
+
+def test_tune_preserves_plan_entries(tmp_path):
+    """registry.tune() load-and-extend must carry tuned plans through: a
+    re-tune that measures unrelated routes leaves the plan table intact."""
+    _, _, _, _, pol, qp = _plan_setup()
+    path = str(tmp_path / "tuned.json")
+    pol.save(path)
+    tuned = registry.tune(
+        routes=[("test.route", registry.BUCKET_ANY, {"a": lambda: None})],
+        repeat=1, path=path,
+    )
+    [key] = list(tuned.plans)
+    assert tuned.plans[key].signatures() == qp.signatures()
+    reloaded = registry.DispatchPolicy.load(path)
+    assert reloaded.to_json() == tuned.to_json()
